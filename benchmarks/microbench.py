@@ -1,0 +1,101 @@
+"""Paper §4.1 latency microbenchmarks.
+
+Paper targets (their prototype): submit ~35us, get-after-done ~110us,
+empty-task e2e ~290us local / ~1ms remote. We measure the same four
+quantities on our runtime plus raw control-plane op latency and task
+throughput; results land in benchmarks/results/microbench.json and feed the
+DES simulator's cost model.
+"""
+from __future__ import annotations
+
+import json
+import statistics
+import time
+from pathlib import Path
+
+from repro import core
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+
+def _bench(fn, n, warmup=50):
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return {"p50_us": statistics.median(ts) * 1e6,
+            "p90_us": statistics.quantiles(ts, n=10)[8] * 1e6,
+            "mean_us": statistics.fmean(ts) * 1e6}
+
+
+def run(n: int = 2000) -> dict:
+    # large spill threshold: uniform load stays on local schedulers (the
+    # paper's point — spillover is for imbalance, not steady state)
+    cluster = core.init(num_nodes=2, workers_per_node=2,
+                        spill_threshold=4096)
+
+    @core.remote
+    def empty():
+        return None
+
+    # 1. task submission (non-blocking create)
+    refs = []
+    submit = _bench(lambda: refs.append(empty.submit()), n)
+    done, pending = core.wait(refs, num_returns=len(refs), timeout=30)
+    assert not pending
+
+    # 2. get() of an already-finished object
+    ref = empty.submit()
+    core.get(ref)
+    get_done = _bench(lambda: core.get(ref), n)
+
+    # 3. end-to-end: submit empty task + get result (local node)
+    e2e_local = _bench(lambda: core.get(empty.submit()), n // 4)
+
+    # 4. end-to-end remote: force placement on the other node via a
+    #    resource only node 1 has
+    cluster.nodes[1].capacity["accel"] = 1.0
+    cluster.nodes[1]._avail["accel"] = 1.0
+
+    @core.remote(resources={"accel": 1.0})
+    def empty_remote():
+        return None
+
+    e2e_remote = _bench(lambda: core.get(empty_remote.submit()), n // 8)
+
+    # 5. control-plane raw op
+    gcs = cluster.gcs
+    kv = _bench(lambda: gcs.put("bench:k", 1), n)
+
+    # 6. single-process task throughput (tasks/s)
+    t0 = time.perf_counter()
+    m = 3000
+    refs = [empty.submit() for _ in range(m)]
+    core.wait(refs, num_returns=m, timeout=60)
+    thr = m / (time.perf_counter() - t0)
+
+    core.shutdown()
+    out = {
+        "submit": submit, "get_done": get_done, "e2e_local": e2e_local,
+        "e2e_remote": e2e_remote, "gcs_put": kv,
+        "throughput_tasks_per_s": thr,
+        "paper_targets_us": {"submit": 35, "get": 110, "e2e_local": 290,
+                             "e2e_remote": 1000},
+    }
+    RESULTS.mkdir(exist_ok=True)
+    (RESULTS / "microbench.json").write_text(json.dumps(out, indent=1))
+    return out
+
+
+def rows():
+    out = run()
+    yield ("microbench.submit_us", out["submit"]["p50_us"], "paper: 35us")
+    yield ("microbench.get_done_us", out["get_done"]["p50_us"], "paper: 110us")
+    yield ("microbench.e2e_local_us", out["e2e_local"]["p50_us"], "paper: 290us")
+    yield ("microbench.e2e_remote_us", out["e2e_remote"]["p50_us"], "paper: 1000us")
+    yield ("microbench.gcs_put_us", out["gcs_put"]["p50_us"], "sub-ms control plane")
+    yield ("microbench.throughput_tasks_s", out["throughput_tasks_per_s"],
+           "single-process")

@@ -1,0 +1,44 @@
+"""Re-run the HLO analyzer over stored .hlo.gz dumps and refresh the
+roofline fields of the dry-run JSON records (no recompilation)."""
+from __future__ import annotations
+
+import gzip
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.analysis.hlo import analyze_hlo  # noqa: E402
+
+DRYRUN = Path(__file__).resolve().parent / "dryrun_results"
+
+
+def main():
+    n = 0
+    for jf in sorted(DRYRUN.glob("*.json")):
+        rec = json.loads(jf.read_text())
+        hf = jf.with_suffix("").with_suffix("")  # strip .json
+        hf = DRYRUN / (jf.stem + ".hlo.gz")
+        if not rec.get("ok") or not hf.exists():
+            continue
+        text = gzip.open(hf, "rt").read()
+        hlo = analyze_hlo(text, total_devices=rec["devices"])
+        n_pods = 2 if rec["mesh"] == "multi" else 1
+        rec.update(
+            hlo_flops=hlo.flops, hlo_dot_flops=hlo.dot_flops,
+            hlo_bytes=hlo.hbm_bytes,
+            hlo_bytes_kernel_adj=hlo.hbm_bytes_kernel_adj,
+            collective_bytes_total=hlo.collective_bytes(),
+            collective_bytes_dcn=(hlo.collective_bytes(group_size=n_pods)
+                                  if rec["mesh"] == "multi" else 0.0),
+            collective_by_kind=hlo.by_kind(),
+            unknown_trip_loops=hlo.unknown_trip_loops,
+        )
+        jf.write_text(json.dumps(rec, indent=1, default=str))
+        n += 1
+    print(f"reanalyzed {n} records")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,179 @@
+"""Render the data-driven sections of EXPERIMENTS.md from artifacts
+(benchmarks/dryrun_results/*.json, benchmarks/results/*.json).
+
+Usage: PYTHONPATH=src python -m benchmarks.report > /tmp/report.md
+The hand-written analysis (hypothesis->change->result logs, commentary)
+lives in EXPERIMENTS.md directly; this module regenerates the tables.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.roofline import load_cell, model_flops, roofline_terms  # noqa: E402
+from repro.configs.base import shapes_for  # noqa: E402
+from repro.configs.registry import ARCH_IDS, get_config  # noqa: E402
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table(mesh: str) -> str:
+    hdr = ("| arch | shape | params | HBM GB/dev (CPU raw / TPU est) | fits "
+           "16GB | FLOPs/step | coll GB (ICI) | coll GB (DCN) | compile s |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for arch in ARCH_IDS:
+        for sh in shapes_for(get_config(arch)):
+            r = load_cell(arch, sh.name, mesh)
+            if r is None:
+                rows.append(f"| {arch} | {sh.name} | MISSING |||||||")
+                continue
+            if not r.get("ok"):
+                rows.append(f"| {arch} | {sh.name} | FAIL: "
+                            f"{r.get('error','')[:60]} |||||||")
+                continue
+            dcn = r.get("collective_bytes_dcn", 0.0)
+            ici = r["collective_bytes_total"] - dcn
+            rows.append(
+                f"| {arch} | {sh.name} | {r['n_params']/1e9:.1f}B "
+                f"| {r['hbm_per_dev_gb']:.1f} / "
+                f"{r['hbm_per_dev_gb_tpu_est']:.1f} "
+                f"| {'Y' if r['fits_16gb'] else 'N'} "
+                f"| {r['hlo_flops']:.2e} | {fmt_bytes(ici)} "
+                f"| {fmt_bytes(dcn)} | {r['compile_s']:.0f} |")
+    return hdr + "\n".join(rows) + "\n"
+
+
+def _lever(arch: str, shape: str, t: dict) -> str:
+    """One sentence: what would move the dominant term down (per brief)."""
+    cfg = get_config(arch)
+    recurrent = any(k in cfg.pattern for k in ("mamba", "mlstm", "slstm"))
+    b = t["bottleneck"]
+    if b == "collective":
+        if shape == "train_4k":
+            if cfg.moe is not None:
+                return ("shard_map'd MoE block (explicit EP all-to-all, no "
+                        "SP<->EP reshard) + fewer FSDP re-gathers")
+            return ("fewer grad-accum microbatches (params re-gather per "
+                    "micro) / overlap gathers with compute")
+        return "keep KV sharded (flash-decoding LSE-combine) vs XLA gather"
+    if b == "memory":
+        if recurrent and shape.startswith("train"):
+            return ("fused Pallas BPTT kernels (sLSTM/Mamba bwd): tile-"
+                    "resident gradient accumulation")
+        if "prefill" in shape:
+            return "chunked (Sarathi-style) prefill bounds activations"
+        if "decode" in shape or "long" in shape:
+            return ("KV-cache quantization (int8: 2x) + batch growth to "
+                    "amortize weight streaming")
+        if cfg.vocab_size > 200_000:
+            return "vocab-chunked loss (262k-logit fp32 buffer)"
+        return "larger microbatch once collectives allow; bf16 temps"
+    return "already compute-bound: raise useful-FLOPs ratio (less remat)"
+
+
+def roofline_table(mesh: str = "single") -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "bottleneck | MODEL/HLO flops | roofline frac | what moves the "
+           "dominant term |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for arch in ARCH_IDS:
+        for sh in shapes_for(get_config(arch)):
+            r = load_cell(arch, sh.name, mesh)
+            if r is None or not r.get("ok"):
+                continue
+            t = roofline_terms(r)
+            rows.append(
+                f"| {arch} | {sh.name} | {t['compute_s']:.2e} "
+                f"| {t['memory_s']:.2e} | {t['collective_s']:.2e} "
+                f"| **{t['bottleneck']}** | {t['useful_flops_ratio']:.2f} "
+                f"| {t['roofline_fraction']:.3f} "
+                f"| {_lever(arch, sh.name, t)} |")
+    return hdr + "\n".join(rows) + "\n"
+
+
+def microbench_table() -> str:
+    f = RESULTS / "microbench.json"
+    if not f.exists():
+        return "_run `python -m benchmarks.run` first_\n"
+    m = json.loads(f.read_text())
+    hdr = ("| metric | ours (p50) | paper (§4.1) |\n|---|---|---|\n")
+    rows = [
+        f"| task submit | {m['submit']['p50_us']:.1f} µs | ~35 µs |",
+        f"| get (finished) | {m['get_done']['p50_us']:.1f} µs | ~110 µs |",
+        f"| e2e empty task, local | {m['e2e_local']['p50_us']:.1f} µs "
+        f"| ~290 µs |",
+        f"| e2e empty task, remote | {m['e2e_remote']['p50_us']:.1f} µs "
+        f"| ~1000 µs |",
+        f"| GCS put | {m['gcs_put']['p50_us']:.1f} µs | sub-ms (claim) |",
+        f"| single-process throughput | "
+        f"{m['throughput_tasks_per_s']:.0f} tasks/s | — (cluster: 1M/s, "
+        f"see DES table) |",
+    ]
+    return hdr + "\n".join(rows) + "\n"
+
+
+def rl_table() -> str:
+    f = RESULTS / "rl_workload.json"
+    if not f.exists():
+        return "_run `python -m benchmarks.run` first_\n"
+    m = json.loads(f.read_text())
+    hdr = "| executor | wall s | vs serial | paper |\n|---|---|---|---|\n"
+    rows = [
+        f"| serial (1 thread) | {m['serial_s']:.2f} | 1.0x | 1.0x |",
+        f"| BSP + central driver @2.5ms/task | {m['bsp_s']:.2f} "
+        f"| {m['bsp_vs_serial']:.2f}x | 0.11x (Spark 9x slower) |",
+        f"| BSP + central driver @10ms/task | {m.get('bsp10_s', 0):.2f} "
+        f"| {m.get('bsp10_vs_serial', 0):.2f}x | |",
+        f"| hybrid (ours) | {m['hybrid_s']:.2f} "
+        f"| {m['hybrid_vs_serial']:.2f}x | 7x |",
+        f"| **hybrid vs BSP** | | **{m['hybrid_vs_bsp']:.1f}x @2.5ms / "
+        f"{m.get('hybrid_vs_bsp10', 0):.1f}x @10ms** | 63x |",
+    ]
+    return hdr + "\n".join(rows) + "\n"
+
+
+def des_table() -> str:
+    f = RESULTS / "throughput.json"
+    if not f.exists():
+        return "_run `python -m benchmarks.run` first_\n"
+    m = json.loads(f.read_text())
+    hdr = ("| nodes | tasks | throughput (tasks/s) | sched p50 | sched p99 "
+           "|\n|---|---|---|---|---|\n")
+    rows = [
+        f"| {r['nodes']} | {r['tasks']} | {r['throughput_tasks_s']:.2e} "
+        f"| {r['sched_p50_us']:.0f} µs | {r['sched_p99_us']:.0f} µs |"
+        for r in m["scaling"]]
+    fl = m["failure"]
+    rows.append(
+        f"| {fl['nodes']} (5% killed, +32 elastic) | {fl['submitted']} "
+        f"| {fl['throughput_tasks_s']:.2e} | — | {fl['replayed']} tasks "
+        f"replayed, all completed: {fl['all_tasks_completed']} |")
+    return hdr + "\n".join(rows) + "\n"
+
+
+def main():
+    print("## §Dry-run — single-pod 16x16 (256 chips)\n")
+    print(dryrun_table("single"))
+    print("\n## §Dry-run — multi-pod 2x16x16 (512 chips)\n")
+    print(dryrun_table("multi"))
+    print("\n## §Roofline — single-pod\n")
+    print(roofline_table("single"))
+    print("\n## Microbench (paper §4.1)\n")
+    print(microbench_table())
+    print("\n## RL workload (paper §4.2)\n")
+    print(rl_table())
+    print("\n## DES scaling (R2)\n")
+    print(des_table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,158 @@
+"""Paper §4.2: the RL training workload, three executors.
+
+Workload (faithful to the paper's description): alternate stages of
+(a) parallel environment simulations (~7ms heterogeneous CPU tasks — the
+paper reports ~7ms mean task length) and (b) batched policy updates on an
+accelerator. Executors:
+
+  serial  — single-threaded reference (paper's baseline = 1.0x)
+  bsp     — centralized-driver + stage-barrier (the structural model of
+            the paper's Spark comparison; per-task driver overhead 2.5ms)
+  hybrid  — our runtime: local-first scheduling, wait()-pipelined
+            consumption so policy updates overlap straggler simulations
+
+Paper numbers: Spark 9x SLOWER than serial; prototype 7x FASTER than
+serial => 63x end-to-end. Our speedups are reported alongside. The JAX
+policy is a real (tiny) MLP updated with a real gradient step.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core
+from repro.core.executors import BSPExecutor, SerialExecutor
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+SIM_MS = 7.0          # paper: ~7ms tasks
+HETERO = 0.5          # +-50% duration heterogeneity (R4)
+N_SIM = 32            # simulations per stage
+N_STAGES = 6
+STRAGGLER_MS = 25.0   # one straggler per stage
+
+
+def simulate(args):
+    """One environment rollout of `dur_ms`. This container has ONE CPU
+    core, so true compute parallelism across workers is impossible; as in
+    the paper (whose simulators are external processes), the rollout
+    duration is modeled by a GIL-releasing sleep plus a small real numpy
+    step. What the benchmark then measures is exactly what §4.2 compares:
+    per-task system overhead + the schedule's critical path."""
+    seed, dur_ms = args
+    rng = np.random.default_rng(seed)
+    time.sleep(dur_ms / 1e3)
+    g = rng.standard_normal(8).astype(np.float32)      # rollout gradient
+    return np.float32(g.mean()), g
+
+
+def _durations(stage: int) -> list:
+    rng = np.random.default_rng(stage)
+    durs = SIM_MS * (1 + HETERO * (2 * rng.random(N_SIM) - 1))
+    durs[0] = STRAGGLER_MS          # straggler (R1/R4: wait() should hide it)
+    return [(stage * 1000 + i, float(d)) for i, d in enumerate(durs)]
+
+
+@jax.jit
+def policy_update(w, grads_batch):
+    g = jnp.mean(grads_batch, axis=0)
+    return w - 0.01 * g
+
+
+def run_serial() -> float:
+    ex = SerialExecutor()
+    w = jnp.zeros((8,))
+    t0 = time.perf_counter()
+    for stage in range(N_STAGES):
+        outs = ex.map_stage(simulate, _durations(stage))
+        grads = jnp.stack([g for _, g in outs])
+        w = policy_update(w, grads)
+    jax.block_until_ready(w)
+    return time.perf_counter() - t0
+
+
+def run_bsp(driver_overhead_s: float = 0.0025) -> float:
+    ex = BSPExecutor(num_workers=8, driver_overhead_s=driver_overhead_s)
+    w = jnp.zeros((8,))
+    t0 = time.perf_counter()
+    for stage in range(N_STAGES):
+        outs = ex.map_stage(simulate, _durations(stage))
+        grads = jnp.stack([g for _, g in outs])
+        w = policy_update(w, grads)
+    jax.block_until_ready(w)
+    ex.shutdown()
+    return time.perf_counter() - t0
+
+
+def run_hybrid() -> float:
+    core.init(num_nodes=4, workers_per_node=2)
+    sim_task = core.remote(simulate)
+    w = jnp.zeros((8,))
+    t0 = time.perf_counter()
+    pending = [sim_task.submit(a) for a in _durations(0)]
+    for stage in range(N_STAGES):
+        # pipeline: consume in completion order, update policy on partial
+        # batches while stragglers run; prefetch next stage immediately (R3)
+        nxt = ([sim_task.submit(a) for a in _durations(stage + 1)]
+               if stage + 1 < N_STAGES else [])
+        grads = []
+        while pending:
+            done, pending = core.wait(pending,
+                                      num_returns=min(8, len(pending)),
+                                      timeout=1.0)
+            if done:
+                grads.extend(g for _, g in core.get(done))
+                w = policy_update(w, jnp.stack(grads[-len(done):]))
+        pending = nxt
+    jax.block_until_ready(w)
+    dt = time.perf_counter() - t0
+    core.shutdown()
+    return dt
+
+
+def run() -> dict:
+    serial_s = run_serial()
+    # the BSP/"Spark" number is a function of the modeled per-task driver
+    # overhead; report the sensitivity instead of picking one flattering
+    # point. 2.5 ms is conservative (Ousterhout NSDI'15 task-launch range);
+    # the paper's "Spark 9x slower than serial" implies ~60 ms/task for
+    # 7 ms tasks, i.e. our 10 ms point is still charitable to Spark.
+    bsp_s = run_bsp(0.0025)
+    bsp10_s = run_bsp(0.010)
+    hybrid_s = run_hybrid()
+    out = {
+        "serial_s": serial_s, "bsp_s": bsp_s, "bsp10_s": bsp10_s,
+        "hybrid_s": hybrid_s,
+        "bsp_vs_serial": serial_s / bsp_s,          # paper: 1/9 = 0.11
+        "bsp10_vs_serial": serial_s / bsp10_s,
+        "hybrid_vs_serial": serial_s / hybrid_s,    # paper: 7
+        "hybrid_vs_bsp": bsp_s / hybrid_s,          # paper: 63
+        "hybrid_vs_bsp10": bsp10_s / hybrid_s,
+        "paper": {"bsp_vs_serial": 1 / 9, "hybrid_vs_serial": 7,
+                  "hybrid_vs_bsp": 63},
+        "config": {"n_sim": N_SIM, "n_stages": N_STAGES, "sim_ms": SIM_MS,
+                   "straggler_ms": STRAGGLER_MS},
+    }
+    RESULTS.mkdir(exist_ok=True)
+    (RESULTS / "rl_workload.json").write_text(json.dumps(out, indent=1))
+    return out
+
+
+def rows():
+    out = run()
+    yield ("rl.serial_s", out["serial_s"] * 1e6, "baseline")
+    yield ("rl.bsp_2.5ms_s", out["bsp_s"] * 1e6,
+           f"{out['bsp_vs_serial']:.2f}x vs serial (paper 0.11x)")
+    yield ("rl.bsp_10ms_s", out["bsp10_s"] * 1e6,
+           f"{out['bsp10_vs_serial']:.2f}x vs serial")
+    yield ("rl.hybrid_s", out["hybrid_s"] * 1e6,
+           f"{out['hybrid_vs_serial']:.2f}x vs serial (paper 7x; "
+           f"8 workers on 1 core caps the ceiling)")
+    yield ("rl.hybrid_vs_bsp", out["hybrid_vs_bsp"],
+           f"@2.5ms driver; @10ms: {out['hybrid_vs_bsp10']:.1f}x "
+           f"(paper 63x vs Spark)")

@@ -1,0 +1,40 @@
+"""Benchmark harness: one section per paper table/claim + the roofline.
+
+  microbench  -- paper 4.1 latency table (submit/get/e2e local/remote)
+  rl_workload -- paper 4.2 serial vs BSP(central driver) vs hybrid (63x)
+  throughput  -- R2: DES task-throughput scaling to 4096 nodes + failures
+  roofline    -- per (arch x shape) compute/memory/collective terms from
+                 the multi-pod dry-run artifacts
+
+Prints ``name,us_per_call,derived`` CSV (where a row is not a latency, the
+value column carries the metric named in `derived`).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+
+def main() -> None:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks import microbench, rl_workload, roofline, throughput
+
+    sections = [("microbench", microbench), ("rl_workload", rl_workload),
+                ("throughput", throughput), ("roofline", roofline)]
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, mod in sections:
+        try:
+            for row_name, value, derived in mod.rows():
+                print(f"{row_name},{value:.3f},{derived}")
+        except Exception:  # noqa: BLE001
+            failed += 1
+            print(f"{name},nan,ERROR", file=sys.stderr)
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

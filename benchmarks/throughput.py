@@ -1,0 +1,82 @@
+"""R2 at scale: task throughput + scheduling latency vs cluster size, via
+the discrete-event simulator running the real scheduling policies with
+costs measured by microbench.py. Also exercises failure injection and
+elastic scale-up at 1,000+ nodes (the paper's target regime).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.core.simulator import ClusterSim, SimCosts, SimTask
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+
+def _costs() -> SimCosts:
+    mb = RESULTS / "microbench.json"
+    if mb.exists():
+        m = json.loads(mb.read_text())
+        return SimCosts(
+            local_sched_s=m["submit"]["p50_us"] * 1e-6,
+            global_sched_s=5 * m["submit"]["p50_us"] * 1e-6,
+            worker_overhead_s=m["get_done"]["p50_us"] * 1e-6,
+            gcs_op_s=m["gcs_put"]["p50_us"] * 1e-6)
+    return SimCosts()
+
+
+def sweep_nodes(task_ms: float = 5.0, tasks_per_node: int = 400) -> list:
+    rows = []
+    for n_nodes in (16, 64, 256, 1024, 4096):
+        sim = ClusterSim(n_nodes, workers_per_node=8, costs=_costs(),
+                         seed=1)
+        n_tasks = n_nodes * tasks_per_node
+        # tasks arrive uniformly from all nodes over 1 virtual second (R3:
+        # locally-born work)
+        for i in range(n_tasks):
+            sim.submit(SimTask(i, task_ms / 1e3, i % n_nodes),
+                       at=(i % 1000) * 1e-3)
+        sim.run()
+        lat = sim.latency_percentiles()
+        rows.append({
+            "nodes": n_nodes, "tasks": n_tasks,
+            "throughput_tasks_s": sim.throughput(),
+            "sched_p50_us": lat.get("p50", 0) * 1e6,
+            "sched_p99_us": lat.get("p99", 0) * 1e6,
+        })
+    return rows
+
+
+def failure_and_elastic(n_nodes: int = 1024) -> dict:
+    sim = ClusterSim(n_nodes, workers_per_node=8, costs=_costs(), seed=2)
+    n_tasks = n_nodes * 200
+    for i in range(n_tasks):
+        sim.submit(SimTask(i, 5e-3, i % n_nodes), at=(i % 500) * 1e-3)
+    # kill 5% of nodes mid-run; add 32 fresh nodes later (elastic)
+    for k in range(n_nodes // 20):
+        sim.kill_node(k * 20, at=0.25)
+    for _ in range(32):
+        sim.add_node(8, at=0.5)
+    sim.run()
+    return {"nodes": n_nodes, "completed": len(sim.finished),
+            "submitted": n_tasks, "replayed": sim.failures_replayed,
+            "throughput_tasks_s": sim.throughput(),
+            "all_tasks_completed": len(sim.finished) == n_tasks}
+
+
+def run() -> dict:
+    out = {"scaling": sweep_nodes(), "failure": failure_and_elastic()}
+    RESULTS.mkdir(exist_ok=True)
+    (RESULTS / "throughput.json").write_text(json.dumps(out, indent=1))
+    return out
+
+
+def rows():
+    out = run()
+    for r in out["scaling"]:
+        yield (f"des.throughput@{r['nodes']}nodes", r["throughput_tasks_s"],
+               f"p99 sched {r['sched_p99_us']:.0f}us")
+    f = out["failure"]
+    yield ("des.failure_completed", f["completed"],
+           f"of {f['submitted']} with 5% nodes killed, "
+           f"{f['replayed']} replayed, elastic +32")

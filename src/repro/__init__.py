@@ -1,0 +1,10 @@
+"""repro: a real-time ML execution framework in JAX.
+
+Reproduction of "Real-Time Machine Learning: The Missing Pieces"
+(Nishihara, Moritz et al., 2017) as a production-grade JAX training and
+inference framework: dynamic task-graph runtime (repro.core), 10-arch model
+zoo (repro.models), SPMD distribution (repro.parallel / repro.launch),
+Pallas TPU kernels (repro.kernels).
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,138 @@
+"""Sharded checkpointing with atomic commits, async save, and elastic
+restore.
+
+Layout:  <dir>/step_<N>/
+           manifest.json        — step, leaf paths, shapes, dtypes
+           arrays.npz           — flat {path: np.ndarray}
+         <dir>/step_<N>.tmp/    — staging; os.replace() commits atomically
+
+Restore can reshard onto a different mesh/topology (elastic scaling): the
+saved arrays are full (unsharded) host arrays; `restore(..., shardings=)`
+re-places them under any NamedSharding tree. Async mode snapshots to host
+then writes in a background thread so the train loop never blocks on disk.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_k(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _k(p) -> str:
+    for attr in ("key", "idx", "name"):
+        if hasattr(p, attr):
+            return str(getattr(p, attr))
+    return str(p)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ---------------------------------------------------------------- save
+
+    def save(self, step: int, tree: Any, blocking: bool = True) -> None:
+        self.wait()  # one in-flight save at a time
+        flat = _flatten(tree)  # host snapshot (device->host copy happens here)
+
+        def _write():
+            try:
+                tmp = self.dir / f"step_{step}.tmp"
+                final = self.dir / f"step_{step}"
+                if tmp.exists():
+                    shutil.rmtree(tmp)
+                tmp.mkdir(parents=True)
+                np.savez(tmp / "arrays.npz", **flat)
+                manifest = {
+                    "step": step,
+                    "leaves": {k: {"shape": list(v.shape),
+                                   "dtype": str(v.dtype)}
+                               for k, v in flat.items()},
+                }
+                (tmp / "manifest.json").write_text(json.dumps(manifest))
+                if final.exists():
+                    shutil.rmtree(final)
+                os.replace(tmp, final)          # atomic commit
+                self._gc()
+            except BaseException as e:  # noqa: BLE001
+                self._error = e
+
+        if blocking:
+            _write()
+            self._raise_if_failed()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self._raise_if_failed()
+
+    def _raise_if_failed(self):
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise e
+
+    def _gc(self):
+        steps = sorted(self.steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    # ------------------------------------------------------------- restore
+
+    def steps(self):
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.is_dir() and not p.name.endswith(".tmp"):
+                try:
+                    out.append(int(p.name.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, tree_like: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Any:
+        """Restore into the structure of `tree_like`; optionally re-place
+        every leaf under `shardings` (elastic restore onto a new mesh)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        arrays = np.load(self.dir / f"step_{step}" / "arrays.npz")
+        flat_paths = jax.tree_util.tree_flatten_with_path(tree_like)[0]
+        leaves = []
+        for path, ref in flat_paths:
+            key = "/".join(_k(p) for p in path)
+            arr = arrays[key]
+            assert tuple(arr.shape) == tuple(ref.shape), (key, arr.shape,
+                                                          ref.shape)
+            leaves.append(arr)
+        tree = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(tree_like), leaves)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), tree, shardings)
+        return tree

@@ -1,0 +1,31 @@
+"""Mixtral-8x22B [arXiv:2401.04088]: 56L d=6144 48H GQA kv=8, 8 experts
+top-2, SWA w=4096 (sub-quadratic -> long_500k runs)."""
+from repro.configs.base import MOE, SWA, MoEConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    num_layers=56,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=16_384,
+    vocab_size=32_768,
+    head_dim=128,
+    pattern=(SWA,),
+    ffn_pattern=(MOE,),
+    window_size=4096,
+    moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=16_384),
+    rope_theta=1_000_000.0,
+    sub_quadratic=True,
+    opt_state_dtype="bfloat16",   # 141B total params
+    train_microbatch=64,
+    fsdp_over_pod=True,
+    remat_policy="dots",
+)
+
+SMOKE = CONFIG.scaled(num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+                      head_dim=32, d_ff=256, vocab_size=256, window_size=16,
+                      moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=256,
+                                    dispatch="dense"),
+                      opt_state_dtype="float32")

@@ -1,0 +1,42 @@
+"""Architecture registry: --arch <id> lookup for launchers/tests/benchmarks."""
+from __future__ import annotations
+
+from repro.configs import (deepseek_v2_236b, gemma3_12b, internvl2_2b,
+                           jamba_1_5_large_398b, mistral_large_123b,
+                           mixtral_8x22b, phi3_medium_14b,
+                           seamless_m4t_medium, stablelm_1_6b, xlstm_125m)
+from repro.configs.base import ModelConfig, ShapeConfig, shapes_for
+
+_MODULES = {
+    "xlstm-125m": xlstm_125m,
+    "phi3-medium-14b": phi3_medium_14b,
+    "mistral-large-123b": mistral_large_123b,
+    "gemma3-12b": gemma3_12b,
+    "stablelm-1.6b": stablelm_1_6b,
+    "mixtral-8x22b": mixtral_8x22b,
+    "deepseek-v2-236b": deepseek_v2_236b,
+    "jamba-1.5-large-398b": jamba_1_5_large_398b,
+    "seamless-m4t-medium": seamless_m4t_medium,
+    "internvl2-2b": internvl2_2b,
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return _MODULES[arch].CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _MODULES[arch].SMOKE
+
+
+def all_cells():
+    """Yield every (arch, shape) dry-run cell (34 total; long_500k only for
+    sub-quadratic archs)."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in shapes_for(cfg):
+            yield arch, shape

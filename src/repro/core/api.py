@@ -1,0 +1,198 @@
+"""The paper's programming model (§3.1):
+
+  1. Task creation is non-blocking; a *future* (ObjectRef) returns
+     immediately.
+  2. Any function can be a remote task (`@remote`); futures as arguments
+     create dataflow dependencies (R4/R5).
+  3. Tasks can create tasks without blocking (R3).
+  4. `get(ref)` blocks for the value.
+  5. `wait(refs, num_returns, timeout)` returns (done, pending) — the
+     straggler-mitigation primitive (R1/R4).
+
+Usage:
+    cluster = init(num_nodes=4, workers_per_node=2)
+
+    @remote
+    def sim(policy, seed): ...
+
+    refs = [sim.submit(p, i) for i in range(100)]
+    done, pending = wait(refs, num_returns=80, timeout=0.05)
+"""
+from __future__ import annotations
+
+import functools
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.control_plane import TASK_DONE
+from repro.core.runtime import Cluster
+from repro.core.worker import current_node, current_task
+
+_global: Dict[str, Optional[Cluster]] = {"cluster": None}
+
+
+def init(num_nodes: int = 2, workers_per_node: int = 2, **kw) -> Cluster:
+    if _global["cluster"] is not None:
+        shutdown()
+    _global["cluster"] = Cluster(num_nodes, workers_per_node, **kw)
+    return _global["cluster"]
+
+
+def attach(cluster: Cluster) -> None:
+    _global["cluster"] = cluster
+
+
+def shutdown() -> None:
+    if _global["cluster"] is not None:
+        _global["cluster"].shutdown()
+        _global["cluster"] = None
+
+
+def _cluster() -> Cluster:
+    c = _global["cluster"]
+    if c is None:
+        raise RuntimeError("repro.core not initialized; call init()")
+    return c
+
+
+@dataclass(frozen=True)
+class ObjectRef:
+    id: str
+
+    def __repr__(self):
+        return f"ObjectRef({self.id})"
+
+
+class RemoteFunction:
+    def __init__(self, fn, num_returns: int = 1,
+                 resources: Optional[Dict[str, float]] = None):
+        self._fn = fn
+        self.name = f"{fn.__module__}.{fn.__qualname__}"
+        self.num_returns = num_returns
+        self.resources = resources or {"cpu": 1.0}
+        self._registered_on: Optional[int] = None
+        functools.update_wrapper(self, fn)
+
+    def options(self, *, num_returns: Optional[int] = None,
+                resources: Optional[Dict[str, float]] = None
+                ) -> "RemoteFunction":
+        rf = RemoteFunction(self._fn,
+                            num_returns or self.num_returns,
+                            resources or self.resources)
+        return rf
+
+    def submit(self, *args, **kwargs):
+        """Non-blocking task creation; returns future(s) immediately."""
+        cluster = _cluster()
+        gcs = cluster.gcs
+        if self._registered_on is not id(cluster):
+            gcs.register_function(self.name, self._fn)
+            self._registered_on = id(cluster)
+        task_id = gcs.next_id("t")
+        ret_ids = tuple(f"{task_id}.r{i}" for i in range(self.num_returns))
+        node = current_node()
+        submitter = node.node_id if node is not None else 0
+        from repro.core.control_plane import TaskSpec
+        if node is None:
+            # driver-submitted work round-robins across live nodes (worker
+            # submissions always enter through their own local scheduler)
+            live = cluster.live_nodes()
+            entry = live[int(task_id[1:]) % len(live)]
+            submitter = entry.node_id
+        else:
+            entry = node
+        spec = TaskSpec(task_id=task_id, func_name=self.name, args=args,
+                        kwargs=kwargs, return_ids=ret_ids,
+                        resources=self.resources, submitter_node=submitter)
+        gcs.register_task(spec)
+        gcs.log_event("submit", task_id, f"node{submitter}")
+        entry.local_scheduler.submit(spec)
+        refs = tuple(ObjectRef(r) for r in ret_ids)
+        return refs[0] if self.num_returns == 1 else refs
+
+    def __call__(self, *args, **kwargs):
+        return self._fn(*args, **kwargs)
+
+
+def remote(fn=None, *, num_returns: int = 1,
+           resources: Optional[Dict[str, float]] = None):
+    """Decorator designating an arbitrary function as a remote task (R4)."""
+    if fn is None:
+        return lambda f: RemoteFunction(f, num_returns, resources)
+    return RemoteFunction(fn, num_returns, resources)
+
+
+def put(value: Any) -> ObjectRef:
+    cluster = _cluster()
+    oid = cluster.gcs.next_id("o")
+    node = current_node() or cluster.live_nodes()[0]
+    node.store.put(oid, value)
+    return ObjectRef(oid)
+
+
+def get(ref, timeout: float = 60.0):
+    """Blocking retrieval of a future's value (§3.1 point 4). A worker
+    blocking here releases its resources + hands its core to a spare
+    worker, so nested get() cannot deadlock the pool."""
+    cluster = _cluster()
+    if isinstance(ref, (list, tuple)):
+        return type(ref)(get(r, timeout) for r in ref)
+    node = current_node()
+    spec = current_task()
+    if node is not None and not node.store.contains(ref.id):
+        node.enter_blocked(spec)
+        try:
+            val = cluster.fetch(ref.id, prefer_node=node.node_id,
+                                timeout=timeout)
+        finally:
+            node.exit_blocked(spec)
+    else:
+        val = cluster.fetch(ref.id, prefer_node=None if node is None
+                            else node.node_id, timeout=timeout)
+    from repro.core.worker import TaskError
+    if isinstance(val, TaskError):
+        raise val
+    return val
+
+
+def wait(refs: Sequence[ObjectRef], num_returns: int = 1,
+         timeout: Optional[float] = None
+         ) -> Tuple[List[ObjectRef], List[ObjectRef]]:
+    """Block until `num_returns` futures are complete or `timeout` elapses;
+    returns (done, pending). Straggler-aware dynamic control flow (§3.1.5).
+    """
+    cluster = _cluster()
+    gcs = cluster.gcs
+    num_returns = min(num_returns, len(refs))
+    done_set = set()
+    cond = threading.Condition()
+
+    def check(ref):
+        if gcs.locations(ref.id):
+            done_set.add(ref.id)
+
+    subs = []
+    for ref in refs:
+        def cb(_k, locs, _rid=ref.id):
+            if locs:
+                with cond:
+                    done_set.add(_rid)
+                    cond.notify_all()
+        gcs.subscribe(f"obj:{ref.id}", cb)
+        subs.append((f"obj:{ref.id}", cb))
+
+    deadline = None if timeout is None else time.perf_counter() + timeout
+    with cond:
+        while len(done_set) < num_returns:
+            remaining = None if deadline is None else deadline - time.perf_counter()
+            if remaining is not None and remaining <= 0:
+                break
+            cond.wait(timeout=remaining if remaining is None
+                      else min(remaining, 0.05))
+    for key, cb in subs:
+        gcs.unsubscribe(key, cb)
+    done = [r for r in refs if r.id in done_set]
+    pending = [r for r in refs if r.id not in done_set]
+    return done, pending

@@ -1,0 +1,163 @@
+"""Logically-centralized control plane (the paper's §3.2.1).
+
+A sharded in-memory key-value store with publish-subscribe, holding ALL
+system control state: the task table, object table, function table,
+computation lineage, and the profiling event log. Every other component
+(workers, schedulers, object stores) is stateless with respect to control
+state and can be restarted, exactly as the paper prescribes; recovery
+re-reads this store and replays lineage.
+
+The paper uses sharded Redis; here each shard is a dict + lock + subscriber
+list (no external dependency — same logical design, hash-sharded exact-match
+keys, pub-sub channels). Shard count is configurable to demonstrate R2
+scaling in the throughput benchmark.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+# ------------------------------------------------------------------ tables
+
+TASK_PENDING = "PENDING"
+TASK_RUNNING = "RUNNING"
+TASK_DONE = "DONE"
+TASK_LOST = "LOST"
+
+
+@dataclass
+class TaskSpec:
+    task_id: str
+    func_name: str
+    args: Tuple[Any, ...]
+    kwargs: Dict[str, Any]
+    return_ids: Tuple[str, ...]
+    resources: Dict[str, float]
+    submitter_node: int
+    created_ts: float = field(default_factory=time.perf_counter)
+
+
+class _Shard:
+    __slots__ = ("lock", "data", "subs")
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.data: Dict[str, Any] = {}
+        self.subs: Dict[str, List[Callable[[str, Any], None]]] = defaultdict(list)
+
+
+class ControlPlane:
+    """Sharded KV + pub-sub. Keys are hashed strings (exact-match only)."""
+
+    def __init__(self, num_shards: int = 8):
+        self.num_shards = num_shards
+        self._shards = [_Shard() for _ in range(num_shards)]
+        self._events: List[Tuple[float, str, str, str, dict]] = []
+        self._events_lock = threading.Lock()
+        self._counter = itertools.count()
+        self.failed = False  # fault-injection: the DB itself
+
+    # -------------------------------------------------------------- kv api
+
+    def _shard(self, key: str) -> _Shard:
+        return self._shards[hash(key) % self.num_shards]
+
+    def put(self, key: str, value: Any) -> None:
+        sh = self._shard(key)
+        with sh.lock:
+            sh.data[key] = value
+            subs = list(sh.subs.get(key, ()))
+        for cb in subs:
+            cb(key, value)
+
+    def update(self, key: str, fn: Callable[[Any], Any], default=None) -> Any:
+        sh = self._shard(key)
+        with sh.lock:
+            new = fn(sh.data.get(key, default))
+            sh.data[key] = new
+            subs = list(sh.subs.get(key, ()))
+        for cb in subs:
+            cb(key, new)
+        return new
+
+    def get(self, key: str, default=None) -> Any:
+        sh = self._shard(key)
+        with sh.lock:
+            return sh.data.get(key, default)
+
+    def subscribe(self, key: str, cb: Callable[[str, Any], None]) -> None:
+        """cb fires on every put to `key`; fires immediately if present."""
+        sh = self._shard(key)
+        with sh.lock:
+            sh.subs[key].append(cb)
+            cur = sh.data.get(key)
+        if cur is not None:
+            cb(key, cur)
+
+    def unsubscribe(self, key: str, cb) -> None:
+        sh = self._shard(key)
+        with sh.lock:
+            if cb in sh.subs.get(key, ()):
+                sh.subs[key].remove(cb)
+
+    # ----------------------------------------------------------- task table
+
+    def register_task(self, spec: TaskSpec) -> None:
+        self.put(f"task:{spec.task_id}", spec)          # lineage record
+        self.put(f"task_state:{spec.task_id}", TASK_PENDING)
+        for rid in spec.return_ids:
+            self.put(f"lineage:{rid}", spec.task_id)
+
+    def task_spec(self, task_id: str) -> Optional[TaskSpec]:
+        return self.get(f"task:{task_id}")
+
+    def set_task_state(self, task_id: str, state: str) -> None:
+        self.put(f"task_state:{task_id}", state)
+
+    def task_state(self, task_id: str) -> Optional[str]:
+        return self.get(f"task_state:{task_id}")
+
+    # --------------------------------------------------------- object table
+
+    def add_location(self, obj_id: str, node: int) -> None:
+        self.update(f"obj:{obj_id}",
+                    lambda s: (s or frozenset()) | {node})
+
+    def remove_locations(self, obj_id: str, nodes) -> None:
+        self.update(f"obj:{obj_id}",
+                    lambda s: (s or frozenset()) - frozenset(nodes))
+
+    def locations(self, obj_id: str) -> frozenset:
+        return self.get(f"obj:{obj_id}") or frozenset()
+
+    def producing_task(self, obj_id: str) -> Optional[str]:
+        return self.get(f"lineage:{obj_id}")
+
+    # ------------------------------------------------------- function table
+
+    def register_function(self, name: str, fn: Callable) -> None:
+        self.put(f"func:{name}", fn)
+
+    def function(self, name: str) -> Callable:
+        fn = self.get(f"func:{name}")
+        if fn is None:
+            raise KeyError(f"function {name!r} not registered")
+        return fn
+
+    # ------------------------------------------------------------ profiling
+
+    def log_event(self, kind: str, task_id: str, where: str, **extra) -> None:
+        with self._events_lock:
+            self._events.append((time.perf_counter(), kind, task_id, where,
+                                 extra))
+
+    def events(self) -> List[Tuple[float, str, str, str, dict]]:
+        with self._events_lock:
+            return list(self._events)
+
+    def next_id(self, prefix: str) -> str:
+        return f"{prefix}{next(self._counter)}"

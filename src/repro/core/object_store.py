@@ -1,0 +1,62 @@
+"""Per-node in-memory object store (the paper's shared-memory store).
+
+Holds task outputs as host objects (numpy/jax arrays or arbitrary Python
+values). Intra-node reads are zero-copy; inter-node reads "transfer" the
+object (a copy plus an optional modeled latency, standing in for
+plasma-over-network in the paper's architecture). Locations are tracked in
+the control plane's object table so schedulers can place tasks near their
+inputs (locality-aware scheduling) and so lineage replay knows what was
+lost when a node dies.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, Optional
+
+from repro.core.control_plane import ControlPlane
+
+
+class ObjectStore:
+    def __init__(self, node_id: int, gcs: ControlPlane,
+                 transfer_latency_s: float = 0.0):
+        self.node_id = node_id
+        self.gcs = gcs
+        self.transfer_latency_s = transfer_latency_s
+        self._lock = threading.Lock()
+        self._data: Dict[str, Any] = {}
+
+    def put(self, obj_id: str, value: Any) -> None:
+        with self._lock:
+            self._data[obj_id] = value
+        self.gcs.add_location(obj_id, self.node_id)
+
+    def contains(self, obj_id: str) -> bool:
+        with self._lock:
+            return obj_id in self._data
+
+    def get_local(self, obj_id: str) -> Any:
+        with self._lock:
+            return self._data[obj_id]
+
+    def fetch_from(self, other: "ObjectStore", obj_id: str) -> Any:
+        """Inter-node transfer: copies the value into this store."""
+        value = other.get_local(obj_id)
+        if self.transfer_latency_s:
+            time.sleep(self.transfer_latency_s)
+        self.put(obj_id, value)
+        return value
+
+    def wipe(self) -> int:
+        """Simulate node loss: drop everything, deregister locations."""
+        with self._lock:
+            ids = list(self._data)
+            self._data.clear()
+        for oid in ids:
+            self.gcs.remove_locations(oid, [self.node_id])
+        return len(ids)
+
+    def bytes_of(self, obj_id: str) -> int:
+        with self._lock:
+            v = self._data.get(obj_id)
+        return getattr(v, "nbytes", 64) if v is not None else 0

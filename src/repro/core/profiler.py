@@ -1,0 +1,60 @@
+"""Debugging & profiling (R7): every state transition lands in the control
+plane's event log; this module turns it into task timelines and summaries.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict, List
+
+from repro.core.control_plane import ControlPlane
+
+
+def task_timeline(gcs: ControlPlane) -> Dict[str, List]:
+    """task_id -> ordered [(t, kind, where)] transitions."""
+    out: Dict[str, List] = defaultdict(list)
+    for t, kind, task_id, where, extra in gcs.events():
+        out[task_id].append((t, kind, where, extra))
+    for v in out.values():
+        v.sort()
+    return out
+
+
+def summarize(gcs: ControlPlane) -> Dict[str, float]:
+    """Aggregate scheduling metrics from the event log."""
+    tl = task_timeline(gcs)
+    submit_to_start, run_times, spills, locals_ = [], [], 0, 0
+    for task_id, events in tl.items():
+        kinds = {k: t for t, k, _, _ in events}
+        if "submit" in kinds and "start" in kinds:
+            submit_to_start.append(kinds["start"] - kinds["submit"])
+        if "start" in kinds and "finish" in kinds:
+            run_times.append(kinds["finish"] - kinds["start"])
+        spills += any(k == "spill" for _, k, _, _ in events)
+        locals_ += any(k == "sched_local" for _, k, _, _ in events)
+
+    def pct(xs, q):
+        if not xs:
+            return 0.0
+        xs = sorted(xs)
+        return xs[min(len(xs) - 1, int(q * len(xs)))]
+
+    return {
+        "num_tasks": len(tl),
+        "sched_latency_p50_us": pct(submit_to_start, 0.5) * 1e6,
+        "sched_latency_p99_us": pct(submit_to_start, 0.99) * 1e6,
+        "task_runtime_p50_ms": pct(run_times, 0.5) * 1e3,
+        "spill_fraction": spills / max(len(tl), 1),
+        "local_fraction": locals_ / max(len(tl), 1),
+    }
+
+
+def dump_chrome_trace(gcs: ControlPlane, path: str) -> None:
+    """Chrome trace-event JSON for chrome://tracing inspection."""
+    import json
+    events = []
+    for t, kind, task_id, where, extra in gcs.events():
+        events.append({"name": f"{kind}:{task_id}", "ph": "i",
+                       "ts": t * 1e6, "pid": where, "tid": where,
+                       "args": dict(extra)})
+    with open(path, "w") as f:
+        json.dump({"traceEvents": events}, f)

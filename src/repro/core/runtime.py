@@ -1,0 +1,264 @@
+"""Cluster runtime: nodes, fault injection, lineage reconstruction,
+elastic scaling.
+
+A Node bundles workers + a local scheduler + an object store + a resource
+ledger; the Cluster wires nodes to one or more global schedulers and the
+control plane. Everything except the control plane is stateless (R6): a
+killed node's objects are reconstructed by replaying lineage from the task
+table, and pending/running tasks on the dead node are resubmitted.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.core.control_plane import (TASK_DONE, TASK_LOST, TASK_PENDING,
+                                      TASK_RUNNING, ControlPlane, TaskSpec)
+from repro.core.object_store import ObjectStore
+from repro.core.scheduler import GlobalScheduler, LocalScheduler
+from repro.core.worker import Worker
+
+
+class Node:
+    def __init__(self, cluster: "Cluster", node_id: int,
+                 resources: Dict[str, float], num_workers: int,
+                 spill_threshold: int = 4,
+                 transfer_latency_s: float = 0.0):
+        self.cluster = cluster
+        self.node_id = node_id
+        self.gcs = cluster.gcs
+        self.alive = True
+        self.capacity = dict(resources)
+        self._avail = dict(resources)
+        self._res_lock = threading.Lock()
+        self.store = ObjectStore(node_id, cluster.gcs, transfer_latency_s)
+        self.run_queue: "queue.Queue[Optional[TaskSpec]]" = queue.Queue()
+        self.local_scheduler = LocalScheduler(self, spill_threshold)
+        self.workers = [Worker(self, i) for i in range(num_workers)]
+        self._max_workers = max(64, 8 * num_workers)
+
+    # ------------------------------------------------------------ resources
+
+    def satisfies(self, req: Dict[str, float]) -> bool:
+        return all(self.capacity.get(k, 0.0) >= v for k, v in req.items())
+
+    def try_acquire(self, req: Dict[str, float]) -> bool:
+        with self._res_lock:
+            if all(self._avail.get(k, 0.0) >= v for k, v in req.items()):
+                for k, v in req.items():
+                    self._avail[k] -= v
+                return True
+            return False
+
+    def release(self, req: Dict[str, float]) -> None:
+        with self._res_lock:
+            for k, v in req.items():
+                self._avail[k] = min(self.capacity.get(k, 0.0),
+                                     self._avail.get(k, 0.0) + v)
+
+    def load(self) -> float:
+        return float(self.run_queue.qsize()
+                     + len(self.local_scheduler._backlog))
+
+    # --------------------------------------------------- blocked workers
+    # A worker blocking in get()/wait() releases its task's resources and
+    # (if needed) a spare worker thread is spawned, so nested tasks cannot
+    # deadlock the pool (same policy as Ray's blocked-worker handling).
+
+    def enter_blocked(self, spec: Optional[TaskSpec]) -> None:
+        if spec is not None:
+            self.release(spec.resources)
+        if (len(self.workers) < self._max_workers
+                and (self.run_queue.qsize() > 0
+                     or self.local_scheduler._backlog)):
+            self.workers.append(Worker(self, len(self.workers)))
+        self.local_scheduler.on_worker_free()
+
+    def exit_blocked(self, spec: Optional[TaskSpec],
+                     timeout: float = 60.0) -> None:
+        if spec is None:
+            return
+        deadline = time.perf_counter() + timeout
+        while not self.try_acquire(spec.resources):
+            if time.perf_counter() > deadline:  # pragma: no cover
+                break
+            time.sleep(0.0002)
+
+    # ------------------------------------------------------------- dataflow
+
+    def dispatch(self, spec: TaskSpec) -> None:
+        self.run_queue.put(spec)
+
+    def resolve(self, arg: Any) -> Any:
+        from repro.core.api import ObjectRef
+        if not isinstance(arg, ObjectRef):
+            return arg
+        return self.cluster.fetch(arg.id, prefer_node=self.node_id)
+
+    def shutdown(self) -> None:
+        for w in self.workers:
+            w.shutdown()
+
+
+class Cluster:
+    def __init__(self, num_nodes: int = 2, workers_per_node: int = 2,
+                 resources_per_node: Optional[Dict[str, float]] = None,
+                 gcs_shards: int = 8, num_global_schedulers: int = 1,
+                 spill_threshold: int = 4, transfer_latency_s: float = 0.0):
+        self.gcs = ControlPlane(gcs_shards)
+        self.global_scheduler = GlobalScheduler(self, num_global_schedulers)
+        self._unschedulable: List[TaskSpec] = []
+        self._unsched_lock = threading.Lock()
+        self.nodes: List[Node] = []
+        res = resources_per_node or {"cpu": float(workers_per_node)}
+        self._node_defaults = (workers_per_node, spill_threshold,
+                               transfer_latency_s)
+        for _ in range(num_nodes):
+            self.add_node(res)
+
+    # --------------------------------------------------------------- nodes
+
+    def add_node(self, resources: Optional[Dict[str, float]] = None) -> Node:
+        """Elastic scale-up: new nodes join by registering with the GCS."""
+        w, spill, lat = self._node_defaults
+        res = dict(resources or {"cpu": float(w)})
+        node = Node(self, len(self.nodes), res, w, spill, lat)
+        self.nodes.append(node)
+        with self._unsched_lock:
+            parked, self._unschedulable = self._unschedulable, []
+        for spec in parked:
+            self.global_scheduler.submit(spec)
+        return node
+
+    def park_unschedulable(self, spec: TaskSpec) -> None:
+        with self._unsched_lock:
+            self._unschedulable.append(spec)
+
+    def live_nodes(self) -> List[Node]:
+        return [n for n in self.nodes if n.alive]
+
+    # ------------------------------------------------------------ fetching
+
+    def fetch(self, obj_id: str, prefer_node: Optional[int] = None,
+              timeout: float = 30.0) -> Any:
+        """Return the value of obj_id, transferring/reconstructing as
+        needed. Blocks until available — event-driven via a pub-sub
+        subscription on the object table (no polling on the hot path;
+        lineage-replay checks run on 50ms wakeups only)."""
+        deadline = time.perf_counter() + timeout
+        ev = threading.Event()
+
+        def _on_loc(_k, locs):
+            if locs:
+                ev.set()
+
+        self.gcs.subscribe(f"obj:{obj_id}", _on_loc)
+        try:
+            while True:
+                locs = self.gcs.locations(obj_id)
+                live = [n for n in locs
+                        if n < len(self.nodes) and self.nodes[n].alive]
+                if live:
+                    if prefer_node in live:
+                        return self.nodes[prefer_node].store.get_local(obj_id)
+                    src = self.nodes[live[0]]
+                    if (prefer_node is not None
+                            and self.nodes[prefer_node].alive):
+                        self.gcs.log_event("transfer", obj_id,
+                                           f"node{live[0]}->node{prefer_node}")
+                        return self.nodes[prefer_node].store.fetch_from(
+                            src.store, obj_id)
+                    return src.store.get_local(obj_id)
+                # object lost or not yet produced: trigger lineage replay if
+                # its producing task already finished (R6)
+                self.maybe_reconstruct(obj_id)
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0:
+                    raise TimeoutError(f"fetch({obj_id}) timed out")
+                ev.clear()
+                ev.wait(timeout=min(remaining, 0.05))
+        finally:
+            self.gcs.unsubscribe(f"obj:{obj_id}", _on_loc)
+
+    # ---------------------------------------------------- fault tolerance
+
+    def maybe_reconstruct(self, obj_id: str) -> None:
+        """Lineage replay: if obj was produced by a finished task but all
+        its copies are gone, resubmit that task (recursing through lost
+        arguments happens naturally via the dataflow gate + fetch)."""
+        task_id = self.gcs.producing_task(obj_id)
+        if task_id is None:
+            return
+        state = self.gcs.task_state(task_id)
+        if state not in (TASK_DONE, TASK_LOST):
+            return  # still pending/running somewhere
+        spec = self.gcs.task_spec(task_id)
+        # all returns must be missing-or-lost to warrant replay
+        if any(self._live_locs(rid) for rid in spec.return_ids):
+            return
+        # atomically transition DONE/LOST -> PENDING; only the winner replays
+        won: List[int] = []
+
+        def trans(s):
+            if s in (TASK_DONE, TASK_LOST):
+                won.append(1)
+                return TASK_PENDING
+            return s
+
+        self.gcs.update(f"task_state:{task_id}", trans)
+        if not won:
+            return  # someone else is already replaying
+        self.gcs.log_event("reconstruct", task_id, "lineage")
+        self.resubmit(spec)
+
+    def _live_locs(self, obj_id: str):
+        return [n for n in self.gcs.locations(obj_id)
+                if n < len(self.nodes) and self.nodes[n].alive]
+
+    def resubmit(self, spec: TaskSpec) -> None:
+        # lost args must be reconstructed before the dataflow gate sees them
+        from repro.core.api import ObjectRef
+        for a in list(spec.args) + list(spec.kwargs.values()):
+            if isinstance(a, ObjectRef) and not self._live_locs(a.id):
+                self.gcs.update(f"obj:{a.id}", lambda s: frozenset())
+                self.maybe_reconstruct(a.id)
+        target = (self.nodes[spec.submitter_node]
+                  if spec.submitter_node < len(self.nodes)
+                  and self.nodes[spec.submitter_node].alive
+                  else self.live_nodes()[0])
+        target.local_scheduler.submit(spec)
+
+    def kill_node(self, node_id: int) -> None:
+        """Fail-stop a node: discard its objects and requeue its tasks."""
+        node = self.nodes[node_id]
+        node.alive = False
+        self.gcs.log_event("node_failure", f"node{node_id}", "cluster")
+        lost = node.store.wipe()
+        # requeue tasks that were queued on the dead node
+        requeue = node.local_scheduler.drain()
+        while True:
+            try:
+                spec = node.run_queue.get_nowait()
+            except queue.Empty:
+                break
+            if spec is not None:
+                requeue.append(spec)
+        for spec in requeue:
+            self.gcs.set_task_state(spec.task_id, TASK_PENDING)
+            self.resubmit(spec)
+        self.gcs.log_event("node_drained", f"node{node_id}", "cluster",
+                           lost_objects=lost, requeued=len(requeue))
+
+    def restart_node(self, node_id: int) -> None:
+        """Stateless component restart (R6): fresh node under the same id."""
+        w, spill, lat = self._node_defaults
+        old = self.nodes[node_id]
+        node = Node(self, node_id, dict(old.capacity), w, spill, lat)
+        self.nodes[node_id] = node
+
+    def shutdown(self) -> None:
+        self.global_scheduler.shutdown()
+        for n in self.nodes:
+            n.shutdown()

@@ -1,0 +1,173 @@
+"""Hybrid bottom-up scheduling (the paper's §3.2.2).
+
+Workers submit tasks to their node's LOCAL scheduler. The local scheduler
+dispatches to a local worker whenever (a) the task's dataflow dependencies
+are satisfied and (b) node resources are available; otherwise, once its
+backlog exceeds a spill threshold, it "spills over" to a GLOBAL scheduler.
+Global schedulers place tasks across nodes using global information:
+object locality (bytes of arguments already resident per node) minus a
+load penalty (queue depth). This is exactly the two-level design that lets
+locally-born work stay off the global scheduler's critical path (R1/R2).
+
+Dataflow gating: a task is *schedulable* iff all its ObjectRef arguments
+are available somewhere in the cluster (the paper's execution model). The
+scheduler subscribes to the control plane's object table for missing
+arguments and re-enqueues the task when the last one lands.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import TYPE_CHECKING, Dict, List, Optional
+
+from repro.core.control_plane import ControlPlane, TaskSpec
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.runtime import Cluster, Node
+
+
+def _ref_ids(spec: TaskSpec) -> List[str]:
+    from repro.core.api import ObjectRef
+    ids = [a.id for a in spec.args if isinstance(a, ObjectRef)]
+    ids += [v.id for v in spec.kwargs.values() if isinstance(v, ObjectRef)]
+    return ids
+
+
+class LocalScheduler:
+    def __init__(self, node: "Node", spill_threshold: int = 4):
+        self.node = node
+        self.gcs: ControlPlane = node.gcs
+        self.spill_threshold = spill_threshold
+        self._lock = threading.Lock()
+        self._backlog: List[TaskSpec] = []
+
+    # ------------------------------------------------------------- submit
+
+    def submit(self, spec: TaskSpec, force_local: bool = False) -> None:
+        """Entry point for locally-created work (and global placements)."""
+        missing = [oid for oid in _ref_ids(spec)
+                   if not self.gcs.locations(oid)]
+        if missing:
+            self._defer_until_ready(spec, missing, force_local)
+            return
+        self._schedule_ready(spec, force_local)
+
+    def _defer_until_ready(self, spec: TaskSpec, missing: List[str],
+                           force_local: bool) -> None:
+        remaining = {"n": len(missing)}
+        lock = threading.Lock()
+
+        def on_ready(_key, locs):
+            if not locs:
+                return
+            with lock:
+                remaining["n"] -= 1
+                if remaining["n"] != 0:
+                    return
+            for oid in missing:
+                self.gcs.unsubscribe(f"obj:{oid}", on_ready)
+            self._schedule_ready(spec, force_local)
+
+        for oid in missing:
+            self.gcs.subscribe(f"obj:{oid}", on_ready)
+
+    def _schedule_ready(self, spec: TaskSpec, force_local: bool) -> None:
+        node = self.node
+        if not node.alive or not node.satisfies(spec.resources):
+            # dead node, or a resource kind this node will never have (R4)
+            node.cluster.global_scheduler.submit(spec)
+            return
+        with self._lock:
+            if node.try_acquire(spec.resources):
+                self.gcs.log_event("sched_local", spec.task_id,
+                                   f"node{node.node_id}")
+                node.dispatch(spec)
+                return
+            if force_local or len(self._backlog) < self.spill_threshold:
+                self._backlog.append(spec)
+                return
+        # overloaded: spill to the global scheduler (paper's "spillover")
+        self.gcs.log_event("spill", spec.task_id, f"node{node.node_id}")
+        node.cluster.global_scheduler.submit(spec)
+
+    # ---------------------------------------------------------- completion
+
+    def on_worker_free(self) -> None:
+        """Called when resources free up; pull from the backlog."""
+        node = self.node
+        while True:
+            with self._lock:
+                nxt = None
+                for i, spec in enumerate(self._backlog):
+                    if node.try_acquire(spec.resources):
+                        nxt = self._backlog.pop(i)
+                        break
+                if nxt is None:
+                    return
+            self.gcs.log_event("sched_local", nxt.task_id,
+                               f"node{node.node_id}")
+            node.dispatch(nxt)
+
+    def drain(self) -> List[TaskSpec]:
+        with self._lock:
+            items, self._backlog = self._backlog, []
+        return items
+
+
+class GlobalScheduler:
+    """Places spilled tasks by locality + load. One or more instances may
+    run; they share the inbound queue (stateless — control state lives in
+    the GCS, so a crashed global scheduler is simply restarted)."""
+
+    def __init__(self, cluster: "Cluster", num_threads: int = 1):
+        self.cluster = cluster
+        self.gcs = cluster.gcs
+        self.inbox: "queue.Queue[Optional[TaskSpec]]" = queue.Queue()
+        self._threads = [
+            threading.Thread(target=self._loop, name=f"global-sched-{i}",
+                             daemon=True)
+            for i in range(num_threads)]
+        for t in self._threads:
+            t.start()
+
+    def submit(self, spec: TaskSpec) -> None:
+        self.inbox.put(spec)
+
+    def _loop(self) -> None:
+        while True:
+            spec = self.inbox.get()
+            if spec is None:
+                return
+            try:
+                self._place(spec)
+            except Exception as e:  # pragma: no cover
+                self.gcs.log_event("sched_error", spec.task_id, "global",
+                                   error=repr(e))
+
+    def _locality_bytes(self, spec: TaskSpec, node: "Node") -> int:
+        total = 0
+        for oid in _ref_ids(spec):
+            if node.store.contains(oid):
+                total += node.store.bytes_of(oid)
+        return total
+
+    def _place(self, spec: TaskSpec) -> None:
+        nodes = [n for n in self.cluster.nodes if n.alive
+                 and n.satisfies(spec.resources)]
+        if not nodes:
+            # no node can ever satisfy: park until topology changes
+            self.cluster.park_unschedulable(spec)
+            return
+        best, best_score = None, None
+        for n in nodes:
+            score = (self._locality_bytes(spec, n)
+                     - 4096.0 * n.load())          # bytes-equivalent penalty
+            if best_score is None or score > best_score:
+                best, best_score = n, score
+        self.gcs.log_event("sched_global", spec.task_id,
+                           f"node{best.node_id}")
+        best.local_scheduler.submit(spec, force_local=True)
+
+    def shutdown(self) -> None:
+        for _ in self._threads:
+            self.inbox.put(None)

@@ -1,0 +1,234 @@
+"""Deterministic discrete-event simulator of the hybrid-scheduler cluster.
+
+The thread-based runtime validates the architecture at ~10 nodes; this DES
+runs the SAME policies (local-first dispatch, spillover threshold, global
+locality/load placement, lineage-replay on failure) at 1,000-4,096 nodes to
+validate the paper's R1/R2 claims at scale without hardware:
+
+  * task throughput vs node count (aggregate millions of tasks/s),
+  * scheduling latency distribution (local vs spilled),
+  * straggler mitigation via wait-style completion-order consumption,
+  * elastic scale-up/down and node failure with task re-execution.
+
+Time is virtual; costs are parameters measured from the real runtime's
+microbenchmarks (benchmarks/microbench.py writes them to JSON).
+"""
+from __future__ import annotations
+
+import heapq
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class SimCosts:
+    local_sched_s: float = 10e-6     # local scheduler decision
+    global_sched_s: float = 50e-6    # spill + global decision + rpc
+    worker_overhead_s: float = 15e-6 # dequeue/arg-resolve/result-store
+    gcs_op_s: float = 3e-6           # control-plane write
+
+
+@dataclass
+class SimTask:
+    task_id: int
+    duration_s: float
+    submit_node: int
+    resources: Dict[str, float] = field(default_factory=lambda: {"cpu": 1.0})
+    submit_t: float = 0.0
+    start_t: float = 0.0
+    finish_t: float = 0.0
+    node: int = -1
+    spilled: bool = False
+    attempts: int = 0
+
+
+class SimNode:
+    def __init__(self, node_id: int, num_workers: int,
+                 resources: Optional[Dict[str, float]] = None):
+        self.node_id = node_id
+        self.capacity = dict(resources or {"cpu": float(num_workers)})
+        self.avail = dict(self.capacity)
+        self.backlog: List[SimTask] = []
+        self.running: Dict[int, SimTask] = {}
+        self.alive = True
+
+    def can_run(self, t: SimTask) -> bool:
+        return all(self.avail.get(k, 0.0) >= v
+                   for k, v in t.resources.items())
+
+    def satisfies(self, t: SimTask) -> bool:
+        return all(self.capacity.get(k, 0.0) >= v
+                   for k, v in t.resources.items())
+
+    def acquire(self, t: SimTask):
+        for k, v in t.resources.items():
+            self.avail[k] -= v
+
+    def release(self, t: SimTask):
+        for k, v in t.resources.items():
+            self.avail[k] = min(self.capacity.get(k, 0.0),
+                                self.avail[k] + v)
+
+    def load(self) -> int:
+        return len(self.backlog) + len(self.running)
+
+
+class ClusterSim:
+    """Event-driven simulation. Events: (time, seq, kind, payload)."""
+
+    def __init__(self, num_nodes: int, workers_per_node: int = 8,
+                 costs: SimCosts = SimCosts(), spill_threshold: int = 4,
+                 seed: int = 0):
+        self.costs = costs
+        self.spill_threshold = spill_threshold
+        self.nodes = [SimNode(i, workers_per_node)
+                      for i in range(num_nodes)]
+        self.now = 0.0
+        self._eq: List[Tuple[float, int, str, object]] = []
+        self._seq = 0
+        self.rng = random.Random(seed)
+        self.finished: List[SimTask] = []
+        self.sched_latencies: List[Tuple[str, float]] = []
+        self.failures_replayed = 0
+
+    # ------------------------------------------------------------- events
+
+    def _push(self, dt: float, kind: str, payload) -> None:
+        self._seq += 1
+        heapq.heappush(self._eq, (self.now + dt, self._seq, kind, payload))
+
+    def submit(self, task: SimTask, at: float = 0.0) -> None:
+        task.submit_t = at
+        self._seq += 1
+        heapq.heappush(self._eq, (at, self._seq, "submit", task))
+
+    # ------------------------------------------------------------ policies
+
+    def _local_schedule(self, task: SimTask) -> None:
+        node = self.nodes[task.submit_node]
+        if node.alive and node.satisfies(task) and node.can_run(task):
+            node.acquire(task)
+            self._start(node, task, self.costs.local_sched_s, "local")
+        elif (node.alive and node.satisfies(task)
+              and len(node.backlog) < self.spill_threshold):
+            node.backlog.append(task)
+        else:
+            task.spilled = True
+            self._push(self.costs.global_sched_s, "global_place", task)
+
+    def _global_place(self, task: SimTask) -> None:
+        cands = [n for n in self.nodes if n.alive and n.satisfies(task)]
+        if not cands:
+            return  # unschedulable until topology changes
+        # locality is approximated by preferring the submitting node, then
+        # least-loaded of a random power-of-two-choices sample (scales O(1))
+        sample = self.rng.sample(cands, min(2, len(cands)))
+        home = self.nodes[task.submit_node]
+        if home.alive and home.satisfies(task):
+            sample.append(home)
+        best = min(sample, key=lambda n: n.load())
+        if best.can_run(task):
+            best.acquire(task)
+            self._start(best, task, 0.0, "global")
+        else:
+            best.backlog.append(task)
+
+    def _start(self, node: SimNode, task: SimTask, extra_delay: float,
+               how: str) -> None:
+        task.node = node.node_id
+        task.attempts += 1
+        lat = self.now + extra_delay - task.submit_t
+        self.sched_latencies.append((how, lat))
+        task.start_t = self.now + extra_delay + self.costs.worker_overhead_s
+        node.running[task.task_id] = task
+        # finish events carry (task, attempt): a replayed task's stale
+        # finish event from a dead node must not complete the new attempt
+        self._push(extra_delay + self.costs.worker_overhead_s
+                   + task.duration_s + self.costs.gcs_op_s, "finish",
+                   (task, task.attempts, node.node_id))
+
+    def _finish(self, payload) -> None:
+        task, attempt, node_id = payload
+        if attempt != task.attempts or node_id != task.node:
+            return  # stale attempt (task was replayed elsewhere)
+        node = self.nodes[node_id]
+        node.running.pop(task.task_id, None)
+        if not node.alive:
+            return  # result discarded; replay was triggered by kill
+        node.release(task)
+        task.finish_t = self.now
+        self.finished.append(task)
+        while node.backlog:
+            nxt = next((t for t in node.backlog if node.can_run(t)), None)
+            if nxt is None:
+                break
+            node.backlog.remove(nxt)
+            node.acquire(nxt)
+            self._start(node, nxt, self.costs.local_sched_s, "backlog")
+
+    # ------------------------------------------------------- fault inject
+
+    def kill_node(self, node_id: int, at: float) -> None:
+        self._seq += 1
+        heapq.heappush(self._eq, (at, self._seq, "kill", node_id))
+
+    def add_node(self, workers: int, at: float) -> None:
+        self._seq += 1
+        heapq.heappush(self._eq, (at, self._seq, "add", workers))
+
+    def _do_kill(self, node_id: int) -> None:
+        node = self.nodes[node_id]
+        node.alive = False
+        # lineage replay: every queued/running task resubmits elsewhere
+        victims = list(node.running.values()) + node.backlog
+        node.backlog = []
+        for t in victims:
+            self.failures_replayed += 1
+            t.submit_node = self.rng.randrange(len(self.nodes))
+            self._push(self.costs.global_sched_s, "global_place", t)
+
+    # ---------------------------------------------------------------- run
+
+    def run(self, until: Optional[float] = None) -> None:
+        while self._eq:
+            t, _, kind, payload = heapq.heappop(self._eq)
+            if until is not None and t > until:
+                self.now = until
+                return
+            self.now = t
+            if kind == "submit":
+                self._local_schedule(payload)
+            elif kind == "global_place":
+                self._global_place(payload)
+            elif kind == "finish":
+                self._finish(payload)
+            elif kind == "kill":
+                self._do_kill(payload)
+            elif kind == "add":
+                self.nodes.append(SimNode(len(self.nodes), payload))
+                # elastic rebalance: spill half of every backlog back to
+                # the global scheduler so new capacity picks it up
+                for node in self.nodes[:-1]:
+                    take, node.backlog = (node.backlog[len(node.backlog)//2:],
+                                          node.backlog[:len(node.backlog)//2])
+                    for t2 in take:
+                        self._push(self.costs.global_sched_s,
+                                   "global_place", t2)
+
+    # ------------------------------------------------------------ metrics
+
+    def throughput(self) -> float:
+        if not self.finished:
+            return 0.0
+        span = max(t.finish_t for t in self.finished) - min(
+            t.submit_t for t in self.finished)
+        return len(self.finished) / max(span, 1e-9)
+
+    def latency_percentiles(self, how: Optional[str] = None):
+        lats = sorted(l for h, l in self.sched_latencies
+                      if how is None or h == how)
+        if not lats:
+            return {}
+        pick = lambda q: lats[min(len(lats) - 1, int(q * len(lats)))]
+        return {"p50": pick(0.5), "p90": pick(0.9), "p99": pick(0.99)}

@@ -1,0 +1,91 @@
+"""Worker processes (threads here): execute tasks, create new tasks.
+
+A worker resolves the task's ObjectRef arguments from the object store
+(dependencies are guaranteed available by the dataflow gate in the local
+scheduler — possibly on another node, triggering a transfer), runs the
+function, stores the returns, and flips the task state in the control
+plane. Workers carry a thread-local "current node" so that tasks creating
+tasks (R3) submit through their node's local scheduler, bottom-up.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import traceback
+from typing import TYPE_CHECKING, Optional
+
+from repro.core.control_plane import (TASK_DONE, TASK_LOST, TASK_RUNNING,
+                                      TaskSpec)
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.runtime import Node
+
+_worker_ctx = threading.local()
+
+
+def current_node() -> Optional["Node"]:
+    return getattr(_worker_ctx, "node", None)
+
+
+def current_task() -> Optional[TaskSpec]:
+    return getattr(_worker_ctx, "spec", None)
+
+
+class TaskError(Exception):
+    pass
+
+
+class Worker(threading.Thread):
+    """Pulls from the node's shared run queue (resources were acquired by
+    the local scheduler before enqueue)."""
+
+    def __init__(self, node: "Node", worker_id: int):
+        super().__init__(name=f"worker-n{node.node_id}w{worker_id}",
+                         daemon=True)
+        self.node = node
+        self.worker_id = worker_id
+        self.start()
+
+    def run(self) -> None:
+        _worker_ctx.node = self.node
+        gcs = self.node.gcs
+        while True:
+            spec = self.node.run_queue.get()
+            if spec is None:
+                return
+            node = self.node
+            _worker_ctx.spec = spec
+            try:
+                gcs.set_task_state(spec.task_id, TASK_RUNNING)
+                gcs.put(f"task_node:{spec.task_id}", node.node_id)
+                gcs.log_event("start", spec.task_id,
+                              f"node{node.node_id}/w{self.worker_id}")
+                fn = gcs.function(spec.func_name)
+                args = [node.resolve(a) for a in spec.args]
+                kwargs = {k: node.resolve(v) for k, v in spec.kwargs.items()}
+                out = fn(*args, **kwargs)
+                if node.alive:  # a dead node's results are discarded
+                    rets = (out,) if len(spec.return_ids) == 1 else tuple(out)
+                    for rid, val in zip(spec.return_ids, rets):
+                        node.store.put(rid, val)
+                    gcs.set_task_state(spec.task_id, TASK_DONE)
+                    gcs.log_event("finish", spec.task_id,
+                                  f"node{node.node_id}/w{self.worker_id}")
+                else:
+                    gcs.set_task_state(spec.task_id, TASK_LOST)
+            except Exception:  # noqa: BLE001
+                err = TaskError(
+                    f"task {spec.task_id} ({spec.func_name}) failed:\n"
+                    + traceback.format_exc())
+                for rid in spec.return_ids:
+                    node.store.put(rid, err)
+                gcs.set_task_state(spec.task_id, TASK_DONE)
+                gcs.log_event("error", spec.task_id,
+                              f"node{node.node_id}/w{self.worker_id}")
+            finally:
+                _worker_ctx.spec = None
+                node.release(spec.resources)
+                node.local_scheduler.on_worker_free()
+
+    def shutdown(self) -> None:
+        self.node.run_queue.put(None)

@@ -1,0 +1,4 @@
+from repro.kernels.flash_attention import attention_ref, flash_attention  # noqa: F401
+from repro.kernels.int8_matmul import int8_matmul, quantize_weights  # noqa: F401
+from repro.kernels.mlstm_scan import mlstm_ref, mlstm_scan  # noqa: F401
+from repro.kernels.ssm_scan import ssm_scan, ssm_scan_ref  # noqa: F401

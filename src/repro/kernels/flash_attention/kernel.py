@@ -1,0 +1,117 @@
+"""Flash attention Pallas TPU kernel.
+
+Tiling: grid (batch, q_heads, S/bq, T/bk); the KV-block axis is innermost so
+each (b, h, i) q-tile keeps its online-softmax state (m, l, acc) in VMEM
+scratch across the sequential j sweep — the canonical TPU adaptation of
+FlashAttention (HBM->VMEM block streaming, MXU-shaped (bq x hd) x (hd x bk)
+products, fp32 accumulators in VREGs/VMEM).
+
+Causal + sliding-window masks are computed from absolute indices; fully
+masked KV blocks are skipped with @pl.when (the grid still visits them, but
+they cost control flow only — on TPU the DMA for those blocks is also
+elided by Mosaic since the loads are inside the predicated region).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  bq: int, bk: int, causal: bool, window: int, scale: float,
+                  nk: int):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = i * bq
+    k_start = j * bk
+    # block-level reachability: any (qi >= kj) and window overlap
+    reachable = True
+    if causal:
+        reachable = (q_start + bq - 1) >= k_start
+    if window > 0:
+        reachable = jnp.logical_and(
+            reachable, k_start + bk - 1 > q_start - window)
+
+    @pl.when(reachable)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)                # (bk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        qi = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kj = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= kj <= qi
+        if window > 0:
+            mask &= (qi - kj) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                                # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = (acc_scr[...] * corr
+                        + jax.lax.dot_general(
+                            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 128, bk: int = 128, interpret: bool = False):
+    """q: (B,H,S,hd); k,v: (B,Hkv,T,hd) -> (B,H,S,hd)."""
+    b, h, s, hd = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    g = h // hkv
+    bq = min(bq, s)
+    bk = min(bk, t)
+    assert s % bq == 0 and t % bk == 0, (s, bq, t, bk)
+    nq, nk = s // bq, t // bk
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(_flash_kernel, bq=bq, bk=bk, causal=causal,
+                               window=window, scale=scale, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b_, h_, i, j, g_=g: (b_, h_ // g_, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b_, h_, i, j, g_=g: (b_, h_ // g_, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda b_, h_, i, j: (b_, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,20 @@
+"""jit'd public wrapper: picks the Pallas kernel on TPU, interpret mode on
+CPU (tests), with the pure-XLA blockwise path as fallback."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention as _kernel
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 128, bk: int = 128, backend: str = "auto"):
+    """backend: auto | pallas | interpret | ref."""
+    if backend == "ref":
+        return attention_ref(q, k, v, causal=causal, window=window)
+    if backend == "auto":
+        on_tpu = jax.default_backend() == "tpu"
+        backend = "pallas" if on_tpu else "interpret"
+    return _kernel(q, k, v, causal=causal, window=window, bq=bq, bk=bk,
+                   interpret=(backend == "interpret"))

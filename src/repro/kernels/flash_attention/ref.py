@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B,H,S,hd); k,v: (B,Hkv,T,hd); GQA via H % Hkv == 0.
+    fp32 softmax; returns (B,H,S,hd) in q.dtype."""
+    b, h, s, hd = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    g = h // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, s, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bkgsh,bkth->bkgst", qf, kf) / math.sqrt(hd)
+    qi = jnp.arange(s)[:, None]
+    kj = jnp.arange(t)[None, :]
+    valid = jnp.ones((s, t), bool)
+    if causal:
+        valid &= kj <= qi
+    if window > 0:
+        valid &= (qi - kj) < window
+    scores = jnp.where(valid[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bkth->bkgsh", w, vf)
+    return out.reshape(b, h, s, hd).astype(q.dtype)

@@ -1,0 +1,57 @@
+"""Weight-only int8 GEMM Pallas TPU kernel (serving path).
+
+Grid (M/bm, N/bn, K/bk), K innermost; fp32 accumulator in VMEM scratch;
+the int8 weight tile dequantizes in-register right before the MXU product
+(the bandwidth win: weights stream from HBM at 1 byte/elem), per-output-
+channel scales applied once at the final K step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _int8_mm_kernel(x_ref, wq_ref, s_ref, o_ref, acc_scr, *, nk: int):
+    kstep = pl.program_id(2)
+
+    @pl.when(kstep == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[...].astype(jnp.float32)          # (bm, bk)
+    w = wq_ref[...].astype(jnp.float32)         # (bk, bn) dequant (no scale)
+    acc_scr[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(kstep == nk - 1)
+    def _final():
+        o_ref[...] = (acc_scr[...] * s_ref[...].astype(jnp.float32)
+                      ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def int8_matmul(x, wq, scales, *, bm: int = 128, bn: int = 128,
+                bk: int = 128, interpret: bool = False):
+    """x: (M,K); wq: (K,N) int8; scales: (N,)."""
+    m, k = x.shape
+    n = wq.shape[1]
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    kernel = functools.partial(_int8_mm_kernel, nk=k // bk)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, wq, scales.reshape(1, n))

@@ -1,0 +1,19 @@
+"""Oracle for weight-only int8 GEMM with per-channel scales."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_weights(w):
+    """w: (K,N) float -> (w_q int8 (K,N), scales (N,) f32), per-out-channel."""
+    wf = w.astype(jnp.float32)
+    scales = jnp.maximum(jnp.max(jnp.abs(wf), axis=0), 1e-12) / 127.0
+    wq = jnp.clip(jnp.round(wf / scales[None, :]), -127, 127).astype(jnp.int8)
+    return wq, scales
+
+
+def int8_matmul_ref(x, wq, scales):
+    """x: (M,K); wq: (K,N) int8; scales: (N,) -> (M,N) in x.dtype."""
+    acc = jnp.einsum("mk,kn->mn", x.astype(jnp.float32),
+                     wq.astype(jnp.float32))
+    return (acc * scales[None, :]).astype(x.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.mlstm_scan.ops import mlstm_scan  # noqa: F401
+from repro.kernels.mlstm_scan.ref import mlstm_ref  # noqa: F401

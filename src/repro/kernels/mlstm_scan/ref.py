@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the chunkwise mLSTM kernel: strictly sequential
+stabilized recurrence (the xLSTM paper's eq. set, one step at a time)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def mlstm_ref(q, k, v, log_i, log_f):
+    """q,k,v: (B,H,S,hd); log_i/log_f: (B,H,S) -> (B,H,S,hd).
+
+    C_t = f'_t C_{t-1} + i'_t v_t k_t^T ;  n_t = f'_t n_{t-1} + i'_t k_t
+    h_t = (C_t q_t) / max(|n_t . q_t|, exp(-m_t))  with the max-stabilizer
+    m_t = max(log f_t + m_{t-1}, log i_t).
+    """
+    b, h, s, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    li = log_i.astype(jnp.float32)
+    lf = log_f.astype(jnp.float32)
+
+    def step(carry, t):
+        c_mat, n_vec, m = carry
+        m_new = jnp.maximum(lf[:, :, t] + m, li[:, :, t])
+        i_g = jnp.exp(li[:, :, t] - m_new)
+        f_g = jnp.exp(lf[:, :, t] + m - m_new)
+        c_mat = (f_g[..., None, None] * c_mat
+                 + i_g[..., None, None]
+                 * vf[:, :, t, :, None] * kf[:, :, t, None, :])
+        n_vec = f_g[..., None] * n_vec + i_g[..., None] * kf[:, :, t]
+        num = jnp.einsum("bhvk,bhk->bhv", c_mat, qf[:, :, t])
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_vec,
+                                             qf[:, :, t])),
+                          jnp.exp(-m_new))
+        return (c_mat, n_vec, m_new), num / den[..., None]
+
+    c0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, h, hd), jnp.float32)
+    m0 = jnp.zeros((b, h), jnp.float32)
+    _, ys = jax.lax.scan(step, (c0, n0, m0), jnp.arange(s))
+    return ys.transpose(1, 2, 0, 3).astype(q.dtype)

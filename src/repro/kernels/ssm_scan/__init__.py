@@ -1,0 +1,2 @@
+from repro.kernels.ssm_scan.ops import ssm_scan  # noqa: F401
+from repro.kernels.ssm_scan.ref import ssm_scan_ref  # noqa: F401

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the Mamba selective-scan kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(x, dt, b_t, c_t, a, d):
+    """Sequential reference.
+    x, dt: (B,S,di); b_t, c_t: (B,S,ds); a: (di,ds); d: (di,) -> y (B,S,di).
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t ; y_t = C_t . h_t + D x_t
+    """
+    bsz, s, di = x.shape
+    ds = a.shape[1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = b_t.astype(jnp.float32)
+    cf = c_t.astype(jnp.float32)
+
+    def step(h, t):
+        decay = jnp.exp(dtf[:, t, :, None] * a[None])              # (B,di,ds)
+        drive = (dtf[:, t, :, None] * bf[:, t, None, :]
+                 * xf[:, t, :, None])
+        h = decay * h + drive
+        y = jnp.einsum("bds,bs->bd", h, cf[:, t]) + d[None] * xf[:, t]
+        return h, y
+
+    h0 = jnp.zeros((bsz, di, ds), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, jnp.arange(s))
+    return ys.swapaxes(0, 1).astype(x.dtype)

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A v5e pod is 16x16 = 256 chips; the multi-pod config stacks 2 pods (DCN
+`pod` axis on the outside, ICI `data`/`model` inside). Defined as a function
+so importing this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Mesh over whatever devices exist (tests / single-host runs)."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+# TPU v5e hardware constants for the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # bytes/s
+ICI_BW = 50e9                 # bytes/s per link (~4 links usable per chip)
+DCN_BW = 6.25e9               # bytes/s per host pair (cross-pod)

@@ -1,0 +1,502 @@
+"""Attention mixers: GQA (global / sliding-window), MLA, cross-attention.
+
+Three entry points per mixer:
+  *_forward        full-sequence (train and prefill)
+  *_prefill_cache  full-sequence + returns a decode cache
+  *_decode         single-token step against the cache
+
+Long sequences use a blockwise online-softmax formulation (pure-JAX flash)
+so the dry-run never materializes an (S, S) score matrix; the Pallas
+`flash_attention` kernel is the TPU-optimized version of the same tiling
+(kernels/flash_attention). Caches for sliding-window layers are ring buffers
+of size `window` with per-slot absolute positions.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense_init, l2norm
+
+Params = Dict[str, Any]
+NEG_INF = -1e30
+
+
+# =============================================================== GQA params
+
+def attention_init(rng, cfg: ModelConfig) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(rng, 4)
+    p = {
+        "w_q": dense_init(ks[0], d, h * hd, dt),
+        "w_k": dense_init(ks[1], d, kv * hd, dt),
+        "w_v": dense_init(ks[2], d, kv * hd, dt),
+        "w_o": dense_init(ks[3], h * hd, d, dt),
+    }
+    return p
+
+
+def cross_attention_init(rng, cfg: ModelConfig) -> Params:
+    return attention_init(rng, cfg)
+
+
+# ========================================================== core softmax op
+
+def _mask_bias(q_pos, kv_pos, window: int, causal: bool):
+    """Additive bias (Sq, Tk) from absolute positions. kv_pos < 0 = invalid."""
+    valid = kv_pos[None, :] >= 0
+    if causal:
+        valid &= kv_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        valid &= (q_pos[:, None] - kv_pos[None, :]) < window
+    return jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def naive_sdpa(q, k, v, q_pos, kv_pos, *, window: int = 0, causal: bool = True,
+               softcap: float = 0.0) -> jnp.ndarray:
+    """q: (B,S,Kv,G,hd); k,v: (B,T,Kv,hd). Returns (B,S,Kv,G,hd)."""
+    hd = q.shape[-1]
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bskgh,btkh->bkgst", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    s = s + _mask_bias(q_pos, kv_pos, window, causal)[None, None, None]
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgst,btkh->bskgh", w, v)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
+def blockwise_sdpa(q, k, v, q_pos, kv_pos, window: int = 0,
+                   causal: bool = True, softcap: float = 0.0,
+                   q_chunk: int = 1024, kv_chunk: int = 1024) -> jnp.ndarray:
+    """Online-softmax attention, scanning KV chunks inside Q chunks, with a
+    FlashAttention-style custom VJP: the forward saves only (out, lse); the
+    backward recomputes each (q-chunk, kv-chunk) score block. Residual
+    memory is O(S), not O(S * n_kv_chunks) as naive scan-of-checkpoint
+    differentiation would give (that inner-scan accumulator chain was the
+    dominant train-memory term in the first dry-run sweep).
+    """
+    out, _ = _blockwise_fwd_impl(q, k, v, q_pos, kv_pos, window, causal,
+                                 softcap, q_chunk, kv_chunk)
+    return out
+
+
+def _blockwise_fwd_impl(q, k, v, q_pos, kv_pos, window, causal, softcap,
+                        q_chunk, kv_chunk):
+    B, S, Kv, G, hd = q.shape
+    T = k.shape[1]
+    hd_v = v.shape[-1]           # may differ from hd (e.g. MLA nope+rope keys)
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, T)
+    assert S % q_chunk == 0 and T % kv_chunk == 0, (S, q_chunk, T, kv_chunk)
+    nq, nk = S // q_chunk, T // kv_chunk
+    scale = 1.0 / math.sqrt(hd)
+
+    qb = q.reshape(B, nq, q_chunk, Kv, G, hd).swapaxes(0, 1)      # (nq,B,Cq,...)
+    qp = q_pos.reshape(nq, q_chunk)
+    kb = k.reshape(B, nk, kv_chunk, Kv, hd).swapaxes(0, 1)
+    vb = v.reshape(B, nk, kv_chunk, Kv, hd_v).swapaxes(0, 1)
+    kp = kv_pos.reshape(nk, kv_chunk)
+
+    def kv_body(carry, blk):
+        m, l, acc = carry
+        q_i, qp_i, k_j, v_j, kp_j = blk
+        s = jnp.einsum("bckgh,btkh->bkgct", q_i, k_j,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        s = s + _mask_bias(qp_i, kp_j, window, causal)[None, None, None]
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgct,btkh->bkgch", p.astype(q_i.dtype), v_j,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    def q_body(blk):
+        q_i, qp_i = blk
+        m0 = jnp.full((B, Kv, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Kv, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Kv, G, q_chunk, hd_v), jnp.float32)
+
+        def scan_fn(carry, j_blk):
+            return kv_body(carry, (q_i, qp_i) + j_blk)
+
+        (m, l, acc), _ = jax.lax.scan(scan_fn, (m0, l0, a0), (kb, vb, kp))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))       # (B,Kv,G,Cq)
+        return out.astype(q.dtype), lse
+
+    out, lse = jax.lax.map(q_body, (qb, qp))           # (nq,B,Kv,G,Cq,hd_v)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, Kv, G, hd_v)
+    lse = lse.transpose(1, 2, 3, 0, 4).reshape(B, Kv, G, S)
+    return out, lse
+
+
+def _blockwise_fwd(q, k, v, q_pos, kv_pos, window, causal, softcap,
+                   q_chunk, kv_chunk):
+    out, lse = _blockwise_fwd_impl(q, k, v, q_pos, kv_pos, window, causal,
+                                   softcap, q_chunk, kv_chunk)
+    return out, (q, k, v, q_pos, kv_pos, out, lse)
+
+
+def _blockwise_bwd(window, causal, softcap, q_chunk, kv_chunk, res, dout):
+    """FlashAttention-2-style backward: per (q-chunk, kv-chunk) block,
+    recompute p from the saved lse, accumulate dq/dk/dv. Only O(chunk^2)
+    transients; residuals are (q,k,v,out,lse)."""
+    q, k, v, q_pos, kv_pos, out, lse = res
+    B, S, Kv, G, hd = q.shape
+    T = k.shape[1]
+    hd_v = v.shape[-1]
+    qc = min(q_chunk, S)
+    kc = min(kv_chunk, T)
+    nq, nk = S // qc, T // kc
+    scale = 1.0 / math.sqrt(hd)
+
+    # delta = rowsum(dout * out)  (B,Kv,G,S)
+    delta = jnp.einsum("bskgh,bskgh->bkgs", dout.astype(jnp.float32),
+                       out.astype(jnp.float32))
+
+    qb = q.reshape(B, nq, qc, Kv, G, hd).swapaxes(0, 1)
+    dob = dout.reshape(B, nq, qc, Kv, G, hd_v).swapaxes(0, 1)
+    lseb = lse.reshape(B, Kv, G, nq, qc).transpose(3, 0, 1, 2, 4)
+    deltab = delta.reshape(B, Kv, G, nq, qc).transpose(3, 0, 1, 2, 4)
+    qpb = q_pos.reshape(nq, qc)
+    kb = k.reshape(B, nk, kc, Kv, hd).swapaxes(0, 1)
+    vb = v.reshape(B, nk, kc, Kv, hd_v).swapaxes(0, 1)
+    kpb = kv_pos.reshape(nk, kc)
+
+    def kv_outer(dq_acc, j_blk):
+        # outer over kv blocks accumulating dk/dv; inner over q blocks.
+        # dq accumulates in the carry (one fp32 dq, not nk stacked copies).
+        k_j, v_j, kp_j = j_blk
+
+        def q_inner(carry, i_blk):
+            dk_j, dv_j = carry
+            q_i, do_i, lse_i, dl_i, qp_i = i_blk
+            s = jnp.einsum("bckgh,btkh->bkgct", q_i, k_j,
+                           preferred_element_type=jnp.float32) * scale
+            s_raw = s
+            if softcap:
+                s = jnp.tanh(s / softcap) * softcap
+            s = s + _mask_bias(qp_i, kp_j, window, causal)[None, None, None]
+            p = jnp.exp(s - lse_i[..., None])                    # (B,Kv,G,c,t)
+            dv_j = dv_j + jnp.einsum("bkgct,bckgh->btkh",
+                                     p, do_i.astype(jnp.float32))
+            dp = jnp.einsum("bckgh,btkh->bkgct",
+                            do_i.astype(jnp.float32),
+                            v_j.astype(jnp.float32))
+            ds = p * (dp - dl_i[..., None])
+            if softcap:
+                ds = ds * (1.0 - jnp.tanh(s_raw / softcap) ** 2)
+            dq_i = jnp.einsum("bkgct,btkh->bckgh", ds,
+                              k_j.astype(jnp.float32)) * scale
+            dk_j = dk_j + jnp.einsum("bkgct,bckgh->btkh", ds,
+                                     q_i.astype(jnp.float32)) * scale
+            return (dk_j, dv_j), dq_i
+
+        dk0 = jnp.zeros((B, kc, Kv, hd), jnp.float32)
+        dv0 = jnp.zeros((B, kc, Kv, hd_v), jnp.float32)
+        (dk_j, dv_j), dq_parts = jax.lax.scan(
+            q_inner, (dk0, dv0), (qb, dob, lseb, deltab, qpb))
+        return dq_acc + dq_parts, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((nq, B, qc, Kv, G, hd), jnp.float32)
+    dq_all, (dk_all, dv_all) = jax.lax.scan(kv_outer, dq0, (kb, vb, kpb))
+    dq = dq_all.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, Kv, G, hd)
+    dk = dk_all.swapaxes(0, 1).reshape(B, T, Kv, hd)
+    dv = dv_all.swapaxes(0, 1).reshape(B, T, Kv, hd_v)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            None, None)
+
+
+blockwise_sdpa.defvjp(_blockwise_fwd, _blockwise_bwd)
+
+
+def sdpa(q, k, v, q_pos, kv_pos, *, window: int = 0, causal: bool = True,
+         softcap: float = 0.0, blockwise_threshold: int = 2048):
+    if q.shape[1] > blockwise_threshold:
+        # nondiff args are positional (custom_vjp)
+        return blockwise_sdpa(q, k, v, q_pos, kv_pos, window, causal,
+                              softcap)
+    return naive_sdpa(q, k, v, q_pos, kv_pos, window=window, causal=causal,
+                      softcap=softcap)
+
+
+# ============================================================ GQA forward
+
+def _qkv(params: Params, cfg: ModelConfig, x, positions):
+    B, S, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, params["w_q"]).reshape(B, S, h, hd)
+    k = jnp.einsum("bsd,de->bse", x, params["w_k"]).reshape(B, S, kv, hd)
+    v = jnp.einsum("bsd,de->bse", x, params["w_v"]).reshape(B, S, kv, hd)
+    if cfg.qk_norm:
+        q, k = l2norm(q), l2norm(k)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.partial_rotary_factor)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.partial_rotary_factor)
+    return q, k, v
+
+
+def _group_for_tp(q, k, v, cfg: ModelConfig, expand_kv: bool, shard_fn):
+    """Arrange heads for the sharded attention core. When the TP width
+    divides H but not Kv (e.g. Mistral-Large: 96 q heads, 8 kv heads, 16-way
+    TP), the (Kv, G) grouping leaves XLA nothing to shard -> replicated
+    attention activations + all-reduces. Expanding KV to full heads (G=1)
+    restores clean head sharding; the per-device KV copy is tiny because H
+    itself is sharded."""
+    B, S = q.shape[:2]
+    if expand_kv and cfg.q_per_kv > 1:
+        k = jnp.repeat(k, cfg.q_per_kv, axis=2)
+        v = jnp.repeat(v, cfg.q_per_kv, axis=2)
+        if shard_fn is not None:
+            q, k, v = (shard_fn(a, "bshd") for a in (q, k, v))
+        qg = q.reshape(B, S, cfg.num_heads, 1, cfg.head_dim)
+    else:
+        qg = q.reshape(B, S, cfg.num_kv_heads, cfg.q_per_kv, cfg.head_dim)
+    return qg, k, v
+
+
+def attention_forward(params: Params, cfg: ModelConfig, x, *, window: int = 0,
+                      causal: bool = True, expand_kv: bool = False,
+                      shard_fn=None) -> jnp.ndarray:
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    q, k, v = _qkv(params, cfg, x, positions)
+    qg, k, v = _group_for_tp(q, k, v, cfg, expand_kv, shard_fn)
+    out = sdpa(qg, k, v, positions, positions, window=window, causal=causal,
+               softcap=cfg.attn_logit_softcap)
+    out = out.reshape(B, S, cfg.num_heads * cfg.head_dim)
+    return jnp.einsum("bse,ed->bsd", out, params["w_o"])
+
+
+# ============================================================ decode caches
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_seq: int, *,
+                    window: int = 0, dtype=None) -> Params:
+    cap = min(window, max_seq) if window > 0 else max_seq
+    dt = dtype or jnp.dtype(cfg.param_dtype)
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, cap, kv, hd), dt),
+        "v": jnp.zeros((batch, cap, kv, hd), dt),
+        "slot_pos": jnp.full((cap,), -1, jnp.int32),
+    }
+
+
+def attention_prefill(params: Params, cfg: ModelConfig, x, *, window: int = 0,
+                      max_seq: int = 0, expand_kv: bool = False,
+                      shard_fn=None) -> Tuple[jnp.ndarray, Params]:
+    """Full-sequence attention + build the decode cache."""
+    B, S, _ = x.shape
+    max_seq = max_seq or S
+    positions = jnp.arange(S)
+    q, k, v = _qkv(params, cfg, x, positions)
+    qg, ke, ve = _group_for_tp(q, k, v, cfg, expand_kv, shard_fn)
+    out = sdpa(qg, ke, ve, positions, positions, window=window, causal=True,
+               softcap=cfg.attn_logit_softcap)
+    out = out.reshape(B, S, cfg.num_heads * cfg.head_dim)
+    out = jnp.einsum("bse,ed->bsd", out, params["w_o"])
+
+    cap = min(window, max_seq) if window > 0 else max_seq
+    cache = init_attn_cache(cfg, B, max_seq, window=window, dtype=k.dtype)
+    take = min(S, cap)
+    idx = jnp.arange(S - take, S)
+    slots = idx % cap
+    cache = {
+        "k": cache["k"].at[:, slots].set(k[:, idx]),
+        "v": cache["v"].at[:, slots].set(v[:, idx]),
+        "slot_pos": cache["slot_pos"].at[slots].set(idx),
+    }
+    return out, cache
+
+
+def attention_decode(params: Params, cfg: ModelConfig, x, cache: Params,
+                     pos, *, window: int = 0) -> Tuple[jnp.ndarray, Params]:
+    """x: (B,1,d); pos: scalar int32 (position of the new token)."""
+    B = x.shape[0]
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    positions = pos[None] if jnp.ndim(pos) == 0 else pos
+    q, k, v = _qkv(params, cfg, x, jnp.reshape(positions, (1,)))
+    cap = cache["k"].shape[1]
+    slot = jnp.mod(pos, cap)
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    slot_pos = jax.lax.dynamic_update_slice(
+        cache["slot_pos"], jnp.reshape(pos, (1,)).astype(jnp.int32), (slot,))
+    qg = q.reshape(B, 1, kv, cfg.q_per_kv, hd)
+    out = naive_sdpa(qg, k_cache, v_cache, jnp.reshape(pos, (1,)), slot_pos,
+                     window=window, causal=True,
+                     softcap=cfg.attn_logit_softcap)
+    out = out.reshape(B, 1, cfg.num_heads * cfg.head_dim)
+    out = jnp.einsum("bse,ed->bsd", out, params["w_o"])
+    return out, {"k": k_cache, "v": v_cache, "slot_pos": slot_pos}
+
+
+# ========================================================== cross-attention
+
+def cross_attention_forward(params: Params, cfg: ModelConfig, x, enc_kv):
+    """x: (B,S,d) decoder states; enc_kv: dict(k,v) precomputed (B,T,kv,hd)."""
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,de->bse", x, params["w_q"]).reshape(
+        B, S, cfg.num_heads, cfg.head_dim)
+    qg = q.reshape(B, S, cfg.num_kv_heads, cfg.q_per_kv, cfg.head_dim)
+    T = enc_kv["k"].shape[1]
+    out = sdpa(qg, enc_kv["k"], enc_kv["v"], jnp.full((S,), T - 1),
+               jnp.arange(T), causal=False)
+    out = out.reshape(B, S, cfg.num_heads * cfg.head_dim)
+    return jnp.einsum("bse,ed->bsd", out, params["w_o"])
+
+
+def encode_cross_kv(params: Params, cfg: ModelConfig, enc_out) -> Params:
+    B, T, _ = enc_out.shape
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    k = jnp.einsum("btd,de->bte", enc_out, params["w_k"]).reshape(B, T, kv, hd)
+    v = jnp.einsum("btd,de->bte", enc_out, params["w_v"]).reshape(B, T, kv, hd)
+    return {"k": k, "v": v}
+
+
+# ===================================================================== MLA
+
+def mla_init(rng, cfg: ModelConfig) -> Params:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(rng, 7)
+    qk_dim = m.nope_head_dim + m.rope_head_dim
+    return {
+        "w_dq": dense_init(ks[0], d, m.q_lora_rank, dt),
+        "q_norm": {"scale": jnp.ones((m.q_lora_rank,), dt)},
+        "w_uq": dense_init(ks[1], m.q_lora_rank, h * qk_dim, dt),
+        "w_dkv": dense_init(ks[2], d, m.kv_lora_rank, dt),
+        "kv_norm": {"scale": jnp.ones((m.kv_lora_rank,), dt)},
+        "w_kr": dense_init(ks[3], d, m.rope_head_dim, dt),
+        # kept 3-D so the decode path can absorb them per-head
+        "w_uk": (jax.random.normal(ks[4], (m.kv_lora_rank, h, m.nope_head_dim),
+                                   jnp.float32) / math.sqrt(m.kv_lora_rank)).astype(dt),
+        "w_uv": (jax.random.normal(ks[5], (m.kv_lora_rank, h, m.v_head_dim),
+                                   jnp.float32) / math.sqrt(m.kv_lora_rank)).astype(dt),
+        "w_o": dense_init(ks[6], h * m.v_head_dim, d, dt),
+    }
+
+
+def _mla_q(params, cfg, x, positions):
+    from repro.models.layers import rmsnorm
+    m = cfg.mla
+    B, S, _ = x.shape
+    h = cfg.num_heads
+    cq = rmsnorm(params["q_norm"], jnp.einsum("bsd,dr->bsr", x, params["w_dq"]))
+    q = jnp.einsum("bsr,re->bse", cq, params["w_uq"]).reshape(
+        B, S, h, m.nope_head_dim + m.rope_head_dim)
+    q_nope, q_rope = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_ckv(params, cfg, x, positions):
+    from repro.models.layers import rmsnorm
+    c_kv = rmsnorm(params["kv_norm"], jnp.einsum("bsd,dr->bsr", x, params["w_dkv"]))
+    k_rope = jnp.einsum("bsd,dr->bsr", x, params["w_kr"])            # (B,S,rope)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_forward(params: Params, cfg: ModelConfig, x) -> jnp.ndarray:
+    """Unabsorbed (train/prefill) MLA: expand K/V per head, flash path."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    h = cfg.num_heads
+    positions = jnp.arange(S)
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)
+    c_kv, k_rope = _mla_ckv(params, cfg, x, positions)
+    k_nope = jnp.einsum("bsr,rhe->bshe", c_kv, params["w_uk"])
+    v = jnp.einsum("bsr,rhe->bshe", c_kv, params["w_uv"])
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)                  # (B,S,h,nope+rope)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (B, S, h, m.rope_head_dim))], axis=-1)
+    # MLA has no KV grouping: treat each head as its own KV head (Kv=h, G=1)
+    out = sdpa(q[:, :, :, None, :].reshape(B, S, h, 1, -1), k, v,
+               positions, positions, causal=True)
+    out = out.reshape(B, S, h * m.v_head_dim)
+    return jnp.einsum("bse,ed->bsd", out, params["w_o"])
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    m = cfg.mla
+    dt = dtype or jnp.dtype(cfg.param_dtype)
+    return {
+        "c_kv": jnp.zeros((batch, max_seq, m.kv_lora_rank), dt),
+        "k_rope": jnp.zeros((batch, max_seq, m.rope_head_dim), dt),
+        "slot_pos": jnp.full((max_seq,), -1, jnp.int32),
+    }
+
+
+def mla_prefill(params: Params, cfg: ModelConfig, x, *, max_seq: int = 0):
+    B, S, _ = x.shape
+    max_seq = max_seq or S
+    out = mla_forward(params, cfg, x)
+    positions = jnp.arange(S)
+    c_kv, k_rope = _mla_ckv(params, cfg, x, positions)
+    cache = init_mla_cache(cfg, B, max_seq, dtype=c_kv.dtype)
+    cache = {
+        "c_kv": cache["c_kv"].at[:, :S].set(c_kv),
+        "k_rope": cache["k_rope"].at[:, :S].set(k_rope),
+        "slot_pos": cache["slot_pos"].at[:S].set(positions),
+    }
+    return out, cache
+
+
+def mla_decode(params: Params, cfg: ModelConfig, x, cache: Params, pos):
+    """Absorbed-matmul MLA decode: attention runs entirely in the latent
+    space (q absorbed through W_UK, context expanded through W_UV afterwards),
+    so per-token KV traffic is kv_lora+rope instead of 2*h*hd.
+    """
+    m = cfg.mla
+    B = x.shape[0]
+    h = cfg.num_heads
+    pos1 = jnp.reshape(pos, (1,))
+    q_nope, q_rope = _mla_q(params, cfg, x, pos1)                  # (B,1,h,*)
+    c_kv_new, k_rope_new = _mla_ckv(params, cfg, x, pos1)
+    c_kv = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv_new, (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope_new, (0, pos, 0))
+    slot_pos = jax.lax.dynamic_update_slice(
+        cache["slot_pos"], pos1.astype(jnp.int32), (pos,))
+
+    if m.absorb_decode:
+        # q_c[b,h,r] = sum_e q_nope[b,h,e] W_uk[r,h,e]
+        q_c = jnp.einsum("bqhe,rhe->bqhr", q_nope, params["w_uk"])
+        s = (jnp.einsum("bqhr,btr->bhqt", q_c, c_kv,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bqhe,bte->bhqt", q_rope, k_rope,
+                          preferred_element_type=jnp.float32))
+        s = s / math.sqrt(m.nope_head_dim + m.rope_head_dim)
+        s = s + _mask_bias(pos1, slot_pos, 0, True)[None, None]
+        w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        ctx_c = jnp.einsum("bhqt,btr->bqhr", w, c_kv)              # latent ctx
+        out = jnp.einsum("bqhr,rhe->bqhe", ctx_c, params["w_uv"])
+    else:
+        k_nope = jnp.einsum("btr,rhe->bthe", c_kv, params["w_uk"])
+        v = jnp.einsum("btr,rhe->bthe", c_kv, params["w_uv"])
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      k_nope.shape[:3] + (m.rope_head_dim,))],
+            axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = naive_sdpa(q[:, :, :, None, :], k, v, pos1, slot_pos,
+                         causal=True)
+        out = out.reshape(B, 1, h, m.v_head_dim)
+    out = out.reshape(B, 1, h * m.v_head_dim)
+    out = jnp.einsum("bse,ed->bsd", out, params["w_o"])
+    return out, {"c_kv": c_kv, "k_rope": k_rope, "slot_pos": slot_pos}

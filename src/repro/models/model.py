@@ -1,0 +1,592 @@
+"""Unified model builder: every assigned architecture is an instance of this
+composable decoder (optionally with an encoder stack and modality stubs).
+
+Layers are organized as repeated *pattern groups* (cfg.pattern/ffn_pattern);
+the forward pass lax.scans over group repetitions with stacked parameters,
+keeping HLO size and compile time independent of depth. Mixer kinds: attn,
+swa, mla, mamba, mlstm, slstm. FFN kinds: dense (SwiGLU), moe, none.
+
+Public surface (all pure functions, jit/pjit-friendly):
+    model = build_model(cfg, rules=None)
+    params = model.init(rng)
+    loss, aux = model.loss_fn(params, batch)
+    logits, cache = model.prefill(params, batch)        # builds decode cache
+    logits, cache = model.decode_step(params, cache, tokens, pos)
+    cache = model.init_cache(batch_size, max_seq)
+    specs = model.input_specs(shape_cfg)                # ShapeDtypeStructs
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ATTN, DENSE, MAMBA, MLA, MLSTM, MOE, NONE,
+                                SLSTM, SWA, ModelConfig, ShapeConfig)
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.layers import (dense_init, embedding_init, embed_tokens,
+                                 rmsnorm, rmsnorm_init, softmax_xent,
+                                 swiglu, swiglu_init, unembed)
+
+Params = Dict[str, Any]
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    """Round vocab up so embedding/lm-head shard evenly (Megatron-style)."""
+    return -(-cfg.vocab_size // 512) * 512
+
+
+# ================================================================== layers
+
+def _init_layer(rng, cfg: ModelConfig, kind: str, ffn_kind: str,
+                with_cross: bool) -> Params:
+    ks = jax.random.split(rng, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    p: Params = {"pre_norm": rmsnorm_init(cfg.d_model, dt)}
+    if kind in (ATTN, SWA):
+        p["mixer"] = attn.attention_init(ks[0], cfg)
+    elif kind == MLA:
+        p["mixer"] = attn.mla_init(ks[0], cfg)
+    elif kind == MAMBA:
+        p["mixer"] = ssm_lib.mamba_init(ks[0], cfg)
+    elif kind == MLSTM:
+        p["mixer"] = xlstm_lib.mlstm_init(ks[0], cfg)
+    elif kind == SLSTM:
+        p["mixer"] = xlstm_lib.slstm_init(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    if with_cross:
+        p["cross_norm"] = rmsnorm_init(cfg.d_model, dt)
+        p["cross"] = attn.cross_attention_init(ks[1], cfg)
+    if ffn_kind == DENSE:
+        p["post_norm"] = rmsnorm_init(cfg.d_model, dt)
+        p["ffn"] = swiglu_init(ks[2], cfg.d_model, cfg.d_ff or 4 * cfg.d_model, dt)
+    elif ffn_kind == MOE:
+        p["post_norm"] = rmsnorm_init(cfg.d_model, dt)
+        p["ffn"] = moe_lib.moe_init(ks[2], cfg)
+    return p
+
+
+def _dense_ffn_width(cfg: ModelConfig) -> int:
+    # deepseek-style: dense first-layer FFN is wider than per-expert width
+    if cfg.moe is not None and cfg.d_ff < cfg.d_model:
+        return 2 * cfg.d_model  # dense stand-in width (MXU-aligned)
+    return cfg.d_ff or 4 * cfg.d_model
+
+
+def _init_first_layer(rng, cfg: ModelConfig, with_cross: bool) -> Params:
+    """first_k_dense layers: pattern[0] mixer + dense FFN of _dense_ffn_width."""
+    ks = jax.random.split(rng, 3)
+    dt = jnp.dtype(cfg.param_dtype)
+    p = _init_layer(ks[0], cfg, cfg.pattern[0], NONE, with_cross)
+    p["post_norm"] = rmsnorm_init(cfg.d_model, dt)
+    p["ffn"] = swiglu_init(ks[1], cfg.d_model, _dense_ffn_width(cfg), dt)
+    return p
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, rules=None):
+        self.cfg = cfg
+        self.rules = rules
+
+    # ---------------------------------------------------------------- init
+
+    def init(self, rng) -> Params:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.param_dtype)
+        vp = padded_vocab(cfg)
+        keys = jax.random.split(rng, 8)
+        p: Params = {
+            "embed": embedding_init(keys[0], vp, cfg.d_model, dt),
+            "final_norm": rmsnorm_init(cfg.d_model, dt),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = dense_init(keys[1], cfg.d_model, vp, dt)
+        if cfg.input_mode == "frames":
+            p["frame_proj"] = dense_init(keys[2], cfg.frame_dim or cfg.d_model,
+                                         cfg.d_model, dt)
+        if cfg.input_mode == "tokens+image":
+            p["img_proj"] = dense_init(keys[2], cfg.d_model, cfg.d_model, dt)
+
+        with_cross = cfg.encoder_layers > 0
+
+        def init_group(rng_g):
+            ks = jax.random.split(rng_g, len(cfg.pattern))
+            return tuple(
+                _init_layer(ks[i], cfg, cfg.pattern[i], cfg.ffn_pattern[i],
+                            with_cross)
+                for i in range(len(cfg.pattern)))
+
+        p["groups"] = jax.vmap(init_group)(
+            jax.random.split(keys[3], cfg.num_groups))
+        if cfg.first_k_dense:
+            fks = jax.random.split(keys[4], cfg.first_k_dense)
+            p["first"] = [
+                _init_first_layer(fks[i], cfg, with_cross)
+                for i in range(cfg.first_k_dense)]
+        if cfg.encoder_layers:
+            def init_enc_layer(rng_e):
+                return _init_layer(rng_e, cfg, ATTN, DENSE, False)
+            p["encoder"] = {
+                "layers": jax.vmap(init_enc_layer)(
+                    jax.random.split(keys[5], cfg.encoder_layers)),
+                "final_norm": rmsnorm_init(cfg.d_model, dt),
+            }
+        return p
+
+    # -------------------------------------------------------------- shards
+
+    def _act(self, x, name="btd"):
+        if self.rules is not None:
+            return self.rules.constrain_act(x, name)
+        return x
+
+    def _moe_shard(self):
+        if self.rules is not None:
+            return self.rules.constrain_moe
+        return None
+
+    def _attn_tp(self):
+        """(expand_kv, shard_fn): expand KV to full heads when TP divides H
+        but not Kv (see attention._group_for_tp)."""
+        cfg = self.cfg
+        if self.rules is None:
+            return False, None
+        tp = self.rules.tp_size
+        expand = (cfg.num_heads % tp == 0 and cfg.num_kv_heads % tp != 0
+                  and cfg.q_per_kv > 1)
+        return expand, (lambda a, nm: self.rules.constrain_act(a, nm))
+
+    # ------------------------------------------------------------- forward
+
+    def _layer_forward(self, lp: Params, kind: str, ffn_kind: str, h, aux,
+                       enc_out=None):
+        cfg = self.cfg
+        mix_in = rmsnorm(lp["pre_norm"], h, cfg.norm_eps)
+        if kind in (ATTN, SWA):
+            window = cfg.window_size if kind == SWA else 0
+            expand, sf = self._attn_tp()
+            out = attn.attention_forward(lp["mixer"], cfg, mix_in,
+                                         window=window, expand_kv=expand,
+                                         shard_fn=sf)
+        elif kind == MLA:
+            out = attn.mla_forward(lp["mixer"], cfg, mix_in)
+        elif kind == MAMBA:
+            out, _ = ssm_lib.mamba_mix(lp["mixer"], cfg, mix_in)
+        elif kind == MLSTM:
+            out, _ = xlstm_lib.mlstm_mix(lp["mixer"], cfg, mix_in)
+        elif kind == SLSTM:
+            out, _ = xlstm_lib.slstm_mix(lp["mixer"], cfg, mix_in)
+        else:
+            raise ValueError(kind)
+        h = self._act(h + out)
+        if enc_out is not None and "cross" in lp:
+            kv = attn.encode_cross_kv(lp["cross"], cfg, enc_out)
+            c_in = rmsnorm(lp["cross_norm"], h, cfg.norm_eps)
+            h = self._act(h + attn.cross_attention_forward(lp["cross"], cfg,
+                                                           c_in, kv))
+        if "ffn" in lp and ffn_kind != NONE:
+            f_in = rmsnorm(lp["post_norm"], h, cfg.norm_eps)
+            if ffn_kind == MOE and "router" in lp["ffn"]:
+                y, moe_aux = moe_lib.moe_apply(lp["ffn"], cfg, f_in,
+                                               self._moe_shard())
+                aux = {k: aux[k] + moe_aux[k] for k in aux}
+            else:
+                y = swiglu(lp["ffn"], f_in)
+            h = self._act(h + y)
+        return h, aux
+
+    def _remat(self, fn):
+        pol = self.cfg.remat_policy
+        if pol == "full":
+            return fn
+        if pol == "dots":
+            policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        else:
+            policy = jax.checkpoint_policies.nothing_saveable
+        return jax.checkpoint(fn, policy=policy)
+
+    def _first_layers_forward(self, params, h, aux, enc_out=None):
+        cfg = self.cfg
+        for lp in params.get("first", []):
+            h, aux = self._layer_forward(lp, cfg.pattern[0], DENSE, h, aux,
+                                         enc_out)
+        return h, aux
+
+    def _backbone(self, params: Params, h, enc_out=None):
+        cfg = self.cfg
+        aux0 = {"moe_lb_loss": jnp.zeros((), jnp.float32),
+                "moe_z_loss": jnp.zeros((), jnp.float32)}
+        h, aux0 = self._first_layers_forward(params, h, aux0, enc_out)
+
+        def group_body(carry, g_params):
+            hh, aux = carry
+            for i, kind in enumerate(cfg.pattern):
+                hh, aux = self._layer_forward(g_params[i], kind,
+                                              cfg.ffn_pattern[i], hh, aux,
+                                              enc_out)
+            return (hh, aux), None
+
+        body = self._remat(group_body)
+        (h, aux), _ = jax.lax.scan(body, (h, aux0), params["groups"])
+        h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        return h, aux
+
+    def _encode(self, params: Params, frames):
+        cfg = self.cfg
+        h = jnp.einsum("btf,fd->btd", frames, params["frame_proj"])
+        h = self._act(h)
+
+        def enc_body(hh, lp):
+            mix_in = rmsnorm(lp["pre_norm"], hh, cfg.norm_eps)
+            out = attn.attention_forward(lp["mixer"], cfg, mix_in,
+                                         causal=False)
+            hh = self._act(hh + out)
+            f_in = rmsnorm(lp["post_norm"], hh, cfg.norm_eps)
+            hh = self._act(hh + swiglu(lp["ffn"], f_in))
+            return hh, None
+
+        h, _ = jax.lax.scan(self._remat(enc_body), h,
+                            params["encoder"]["layers"])
+        return rmsnorm(params["encoder"]["final_norm"], h, cfg.norm_eps)
+
+    def _embed_inputs(self, params: Params, batch: Dict[str, jnp.ndarray]):
+        """Returns (decoder-input hidden states, enc_out or None)."""
+        cfg = self.cfg
+        enc_out = None
+        if cfg.input_mode == "frames":
+            enc_out = self._encode(params, batch["frames"])
+            h = embed_tokens(params["embed"], batch["tokens"])
+        elif cfg.input_mode == "tokens+image":
+            img = jnp.einsum("bpd,de->bpe", batch["image_embeds"],
+                             params["img_proj"])
+            tok = embed_tokens(params["embed"], batch["tokens"])
+            h = jnp.concatenate([img.astype(tok.dtype), tok], axis=1)
+        else:
+            h = embed_tokens(params["embed"], batch["tokens"])
+        return self._act(h), enc_out
+
+    def _hidden(self, params: Params, batch):
+        h, enc_out = self._embed_inputs(params, batch)
+        return self._backbone(params, h, enc_out)
+
+    def forward(self, params: Params, batch) -> Tuple[jnp.ndarray, Dict]:
+        h, aux = self._hidden(params, batch)
+        logits = unembed(params["embed"], h, self.cfg.tie_embeddings,
+                         params.get("lm_head"))
+        return self._act(logits, "logits"), aux
+
+    def _labels_and_mask(self, batch, s: int):
+        """Per-position next-token labels + validity mask, aligned to the
+        full hidden-state sequence (so the loss can chunk over S)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        if cfg.input_mode == "tokens+image":
+            p = cfg.num_image_tokens
+            # position p-1+j predicts tokens[:, j]
+            labels = jnp.zeros((b, s), jnp.int32)
+            labels = jax.lax.dynamic_update_slice(labels, tokens, (0, p - 1))
+            pos = jnp.arange(s)
+            mask = ((pos >= p - 1) & (pos < p - 1 + tokens.shape[1])
+                    ).astype(jnp.float32)[None, :].repeat(b, 0)
+            return labels, mask
+        labels = jnp.concatenate(
+            [tokens[:, 1:], jnp.zeros((b, 1), tokens.dtype)], axis=1)
+        mask = jnp.concatenate(
+            [jnp.ones((b, s - 1), jnp.float32), jnp.zeros((b, 1))], axis=1)
+        return labels, mask
+
+    def _chunked_xent(self, params: Params, h, labels, mask,
+                      chunk: int = 1024):
+        """Never materializes the full (B,S,V) logits: scans S-chunks with
+        per-chunk remat (the vocab-chunked-loss lever for 262k vocabs)."""
+        cfg = self.cfg
+        b, s, d = h.shape
+        chunk = math.gcd(s, chunk)
+        n = s // chunk
+        vp = padded_vocab(cfg)
+        pad = (jnp.arange(vp) >= cfg.vocab_size) if vp != cfg.vocab_size \
+            else None
+
+        @jax.checkpoint
+        def body(carry, xs):
+            hc, lc, mc = xs
+            logits = unembed(params["embed"], hc, cfg.tie_embeddings,
+                             params.get("lm_head")).astype(jnp.float32)
+            if cfg.logit_softcap:
+                logits = jnp.tanh(logits / cfg.logit_softcap) \
+                    * cfg.logit_softcap
+            if pad is not None:
+                logits = jnp.where(pad, -1e30, logits)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+            return carry + jnp.sum((lse - gold) * mc), None
+
+        xs = (h.reshape(b, n, chunk, d).swapaxes(0, 1),
+              labels.reshape(b, n, chunk).swapaxes(0, 1),
+              mask.reshape(b, n, chunk).swapaxes(0, 1))
+        tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), xs)
+        return tot / jnp.maximum(jnp.sum(mask), 1.0)
+
+    # vocabularies at/above this size use the chunked loss
+    CHUNKED_LOSS_VOCAB = 131_072
+
+    def loss_fn(self, params: Params, batch) -> Tuple[jnp.ndarray, Dict]:
+        cfg = self.cfg
+        vp = padded_vocab(cfg)
+        h, aux = self._hidden(params, batch)
+        s = h.shape[1]
+        if vp >= self.CHUNKED_LOSS_VOCAB and s > 1024:
+            labels, mask = self._labels_and_mask(batch, s)
+            loss = self._chunked_xent(params, h, labels, mask)
+        else:
+            logits = self._act(unembed(params["embed"], h,
+                                       cfg.tie_embeddings,
+                                       params.get("lm_head")), "logits")
+            if vp != cfg.vocab_size:
+                pad_mask = jnp.arange(vp) >= cfg.vocab_size
+                logits = jnp.where(pad_mask, -1e30,
+                                   logits.astype(jnp.float32))
+            tokens = batch["tokens"]
+            if cfg.input_mode == "tokens+image":
+                p = cfg.num_image_tokens
+                loss = softmax_xent(logits[:, p - 1:-1], tokens,
+                                    logit_softcap=cfg.logit_softcap)
+            else:
+                loss = softmax_xent(logits[:, :-1], tokens[:, 1:],
+                                    logit_softcap=cfg.logit_softcap)
+        total = (loss + 0.01 * aux["moe_lb_loss"] + 1e-3 * aux["moe_z_loss"])
+        aux = dict(aux, xent=loss)
+        return total, aux
+
+    # ------------------------------------------------------------- caches
+
+    def _init_layer_cache(self, kind: str, batch: int, max_seq: int,
+                          with_cross: bool):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.param_dtype)
+        if kind in (ATTN, SWA):
+            window = cfg.window_size if kind == SWA else 0
+            c = attn.init_attn_cache(cfg, batch, max_seq, window=window, dtype=dt)
+        elif kind == MLA:
+            c = attn.init_mla_cache(cfg, batch, max_seq, dtype=dt)
+        elif kind == MAMBA:
+            c = ssm_lib.init_mamba_cache(cfg, batch, dtype=dt)
+        elif kind == MLSTM:
+            c = xlstm_lib.init_mlstm_cache(cfg, batch, dtype=dt)
+        elif kind == SLSTM:
+            c = xlstm_lib.init_slstm_cache(cfg, batch, dtype=dt)
+        else:
+            raise ValueError(kind)
+        if with_cross:
+            kv, hd = cfg.num_kv_heads, cfg.head_dim
+            c = dict(c, cross_k=jnp.zeros((batch, max_seq, kv, hd), dt),
+                     cross_v=jnp.zeros((batch, max_seq, kv, hd), dt))
+        return c
+
+    def init_cache(self, batch: int, max_seq: int) -> Params:
+        cfg = self.cfg
+        with_cross = cfg.encoder_layers > 0
+
+        def group_cache(_):
+            return tuple(
+                self._init_layer_cache(k, batch, max_seq, with_cross)
+                for k in cfg.pattern)
+
+        cache: Params = {
+            "groups": jax.vmap(group_cache)(jnp.arange(cfg.num_groups))}
+        if cfg.first_k_dense:
+            cache["first"] = [
+                self._init_layer_cache(cfg.pattern[0], batch, max_seq,
+                                       with_cross)
+                for _ in range(cfg.first_k_dense)]
+        return cache
+
+    # ------------------------------------------------------------- decode
+
+    def _layer_decode(self, lp: Params, kind: str, ffn_kind: str, h, cache,
+                      pos):
+        cfg = self.cfg
+        mix_in = rmsnorm(lp["pre_norm"], h, cfg.norm_eps)
+        cross = {k: cache[k] for k in ("cross_k", "cross_v") if k in cache}
+        core = {k: v for k, v in cache.items() if not k.startswith("cross_")}
+        if kind in (ATTN, SWA):
+            window = cfg.window_size if kind == SWA else 0
+            out, core = attn.attention_decode(lp["mixer"], cfg, mix_in, core,
+                                              pos, window=window)
+        elif kind == MLA:
+            out, core = attn.mla_decode(lp["mixer"], cfg, mix_in, core, pos)
+        elif kind == MAMBA:
+            out, core = ssm_lib.mamba_decode(lp["mixer"], cfg, mix_in, core)
+        elif kind == MLSTM:
+            out, core = xlstm_lib.mlstm_decode(lp["mixer"], cfg, mix_in, core)
+        elif kind == SLSTM:
+            out, core = xlstm_lib.slstm_decode(lp["mixer"], cfg, mix_in, core)
+        else:
+            raise ValueError(kind)
+        h = h + out
+        if cross:
+            c_in = rmsnorm(lp["cross_norm"], h, cfg.norm_eps)
+            h = h + attn.cross_attention_forward(
+                lp["cross"], cfg, c_in, {"k": cross["cross_k"],
+                                         "v": cross["cross_v"]})
+        if "ffn" in lp and ffn_kind != NONE:
+            f_in = rmsnorm(lp["post_norm"], h, cfg.norm_eps)
+            if ffn_kind == MOE and "router" in lp["ffn"]:
+                y, _ = moe_lib.moe_apply(lp["ffn"], cfg, f_in,
+                                         self._moe_shard())
+            else:
+                y = swiglu(lp["ffn"], f_in)
+            h = h + y
+        return h, dict(core, **cross)
+
+    def decode_step(self, params: Params, cache: Params, tokens, pos):
+        """tokens: (B,1) int32; pos: scalar int32 -> (logits (B,1,V), cache)."""
+        cfg = self.cfg
+        h = embed_tokens(params["embed"], tokens)
+        new_cache: Params = {}
+        if cfg.first_k_dense:
+            new_first = []
+            for i, lp in enumerate(params["first"]):
+                h, c = self._layer_decode(lp, cfg.pattern[0], DENSE, h,
+                                          cache["first"][i], pos)
+                new_first.append(c)
+            new_cache["first"] = new_first
+
+        def group_body(hh, xs):
+            g_params, g_cache = xs
+            new_g = []
+            for i, kind in enumerate(cfg.pattern):
+                hh, c = self._layer_decode(g_params[i], kind,
+                                           cfg.ffn_pattern[i], hh,
+                                           g_cache[i], pos)
+                new_g.append(c)
+            return hh, tuple(new_g)
+
+        h, groups_cache = jax.lax.scan(group_body, h,
+                                       (params["groups"], cache["groups"]))
+        new_cache["groups"] = groups_cache
+        h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        logits = unembed(params["embed"], h, cfg.tie_embeddings,
+                         params.get("lm_head"))
+        return logits, new_cache
+
+    # ------------------------------------------------------------ prefill
+
+    def prefill(self, params: Params, batch, max_seq: int = 0):
+        """Full-sequence forward that also builds the decode cache."""
+        cfg = self.cfg
+        h, enc_out = self._embed_inputs(params, batch)
+        max_seq = max_seq or h.shape[1]
+        aux = {"moe_lb_loss": jnp.zeros((), jnp.float32),
+               "moe_z_loss": jnp.zeros((), jnp.float32)}
+        new_cache: Params = {}
+        if cfg.first_k_dense:
+            firsts = []
+            for lp in params["first"]:
+                h, aux, c = self._layer_prefill(lp, cfg.pattern[0], DENSE, h,
+                                                aux, enc_out, max_seq)
+                firsts.append(c)
+            new_cache["first"] = firsts
+
+        def group_body(carry, g_params):
+            hh, aux_c = carry
+            caches = []
+            for i, kind in enumerate(cfg.pattern):
+                hh, aux_c, c = self._layer_prefill(
+                    g_params[i], kind, cfg.ffn_pattern[i], hh, aux_c,
+                    enc_out, max_seq)
+                caches.append(c)
+            return (hh, aux_c), tuple(caches)
+
+        (h, aux), groups_cache = jax.lax.scan(group_body, (h, aux),
+                                              params["groups"])
+        new_cache["groups"] = groups_cache
+        h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        logits = unembed(params["embed"], h[:, -1:], cfg.tie_embeddings,
+                         params.get("lm_head"))
+        return logits, new_cache
+
+    def _layer_prefill(self, lp, kind, ffn_kind, h, aux, enc_out, max_seq):
+        cfg = self.cfg
+        mix_in = rmsnorm(lp["pre_norm"], h, cfg.norm_eps)
+        if kind in (ATTN, SWA):
+            window = cfg.window_size if kind == SWA else 0
+            expand, sf = self._attn_tp()
+            out, core = attn.attention_prefill(lp["mixer"], cfg, mix_in,
+                                               window=window, max_seq=max_seq,
+                                               expand_kv=expand, shard_fn=sf)
+        elif kind == MLA:
+            out, core = attn.mla_prefill(lp["mixer"], cfg, mix_in,
+                                         max_seq=max_seq)
+        elif kind == MAMBA:
+            out, (h_last, conv_tail) = ssm_lib.mamba_mix(lp["mixer"], cfg,
+                                                         mix_in)
+            core = {"h": h_last, "conv": conv_tail}
+        elif kind == MLSTM:
+            out, (st, conv_tail) = xlstm_lib.mlstm_mix(lp["mixer"], cfg,
+                                                       mix_in)
+            core = {"C": st[0], "n": st[1], "m": st[2], "conv": conv_tail}
+        elif kind == SLSTM:
+            out, (st, conv_tail) = xlstm_lib.slstm_mix(lp["mixer"], cfg,
+                                                       mix_in)
+            core = {"c": st[0], "n": st[1], "m": st[2], "h": st[3],
+                    "conv": conv_tail}
+        else:
+            raise ValueError(kind)
+        h = self._act(h + out)
+        if enc_out is not None and "cross" in lp:
+            kv = attn.encode_cross_kv(lp["cross"], cfg, enc_out)
+            c_in = rmsnorm(lp["cross_norm"], h, cfg.norm_eps)
+            h = self._act(h + attn.cross_attention_forward(lp["cross"], cfg,
+                                                           c_in, kv))
+            # pad/crop encoder KV to max_seq for a fixed-size cache
+            t = kv["k"].shape[1]
+            if t < max_seq:
+                padw = ((0, 0), (0, max_seq - t), (0, 0), (0, 0))
+                kv = {k: jnp.pad(v, padw) for k, v in kv.items()}
+            core = dict(core, cross_k=kv["k"][:, :max_seq],
+                        cross_v=kv["v"][:, :max_seq])
+        if "ffn" in lp and ffn_kind != NONE:
+            f_in = rmsnorm(lp["post_norm"], h, cfg.norm_eps)
+            if ffn_kind == MOE and "router" in lp["ffn"]:
+                y, moe_aux = moe_lib.moe_apply(lp["ffn"], cfg, f_in,
+                                               self._moe_shard())
+                aux = {k: aux[k] + moe_aux[k] for k in aux}
+            else:
+                y = swiglu(lp["ffn"], f_in)
+            h = self._act(h + y)
+        return h, aux, core
+
+    # -------------------------------------------------------------- specs
+
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for every model input of this cell."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind in ("train", "prefill"):
+            if cfg.input_mode == "frames":
+                return {"frames": jax.ShapeDtypeStruct(
+                            (b, s, cfg.frame_dim or cfg.d_model),
+                            jnp.dtype(cfg.param_dtype)),
+                        "tokens": jax.ShapeDtypeStruct((b, s), i32)}
+            if cfg.input_mode == "tokens+image":
+                p = cfg.num_image_tokens
+                return {"image_embeds": jax.ShapeDtypeStruct(
+                            (b, p, cfg.d_model), jnp.dtype(cfg.param_dtype)),
+                        "tokens": jax.ShapeDtypeStruct((b, s - p), i32)}
+            return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        # decode: one new token against a cache of length seq_len
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+
+
+def build_model(cfg: ModelConfig, rules=None) -> Model:
+    return Model(cfg, rules)

@@ -1,0 +1,174 @@
+"""Mixture-of-Experts FFN with three dispatch strategies.
+
+``dense``    — compute every expert for every token, weight by gates. Exact,
+               used for smoke tests and as the oracle in property tests.
+``dropping`` — GShard/Switch-style capacity-bounded einsum dispatch: the
+               (tokens, experts, capacity) one-hot keeps everything MXU-shaped
+               and shards cleanly (experts over the `model` axis => XLA emits
+               all-to-all). Dry-run default.
+``ragged``   — sort-by-expert + lax.ragged_dot grouped GEMM ("dropless",
+               MegaBlocks-flavored). Perf variant used in hillclimbing.
+
+Router: fp32 logits, softmax-then-top-k with renormalization. Aux losses
+(switch load-balance + router z-loss) are returned for the trainer.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.layers import dense_init
+
+Params = Dict[str, Any]
+
+
+def moe_init(rng, cfg: ModelConfig) -> Params:
+    mc = cfg.moe
+    d, f, e = cfg.d_model, mc.d_ff_expert, mc.num_experts
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(rng, 5)
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d, f), jnp.float32) * scale).astype(dt),
+        "w_up": (jax.random.normal(ks[2], (e, d, f), jnp.float32) * scale).astype(dt),
+        "w_down": (jax.random.normal(ks[3], (e, f, d), jnp.float32)
+                   / math.sqrt(f)).astype(dt),
+    }
+    if mc.num_shared_experts:
+        from repro.models.layers import swiglu_init
+        p["shared"] = swiglu_init(ks[4], d, f * mc.num_shared_experts, dt)
+    return p
+
+
+def _router(params: Params, mc: MoEConfig, x2d: jnp.ndarray):
+    """x2d: (T, d) -> gates (T, k), idx (T, k), aux losses."""
+    logits = jnp.einsum("td,de->te", x2d.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, mc.top_k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    # switch load-balance loss: E * sum_e f_e * P_e
+    e = mc.num_experts
+    f_e = jnp.zeros((e,), jnp.float32).at[top_i.reshape(-1)].add(1.0)
+    f_e = f_e / jnp.maximum(f_e.sum(), 1.0)
+    p_e = probs.mean(axis=0)
+    lb_loss = e * jnp.sum(f_e * p_e)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return top_p, top_i, {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss}
+
+
+def _expert_ffn(params: Params, h_in: jnp.ndarray) -> jnp.ndarray:
+    """h_in: (E, C, d) -> (E, C, d), per-expert SwiGLU."""
+    g = jnp.einsum("ecd,edf->ecf", h_in, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", h_in, params["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(h_in.dtype) * u
+    return jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+
+
+def _dense_moe(params: Params, mc: MoEConfig, x2d, gates, idx):
+    t, d = x2d.shape
+    e = mc.num_experts
+    # (T,E) combine weights from the top-k selection
+    comb = jnp.zeros((t, e), x2d.dtype)
+    comb = comb.at[jnp.arange(t)[:, None], idx].set(gates.astype(x2d.dtype))
+    g = jnp.einsum("td,edf->tef", x2d, params["w_gate"])
+    u = jnp.einsum("td,edf->tef", x2d, params["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x2d.dtype) * u
+    y = jnp.einsum("tef,efd->ted", h, params["w_down"])
+    return jnp.einsum("ted,te->td", y, comb)
+
+
+def _dropping_moe(params: Params, mc: MoEConfig, x3d, gates, idx,
+                  shard_fn=None):
+    """GShard dispatch with per-*group* expert capacity.
+
+    x3d: (G, N, d) — G groups of N tokens. Capacity is per (group, expert),
+    so the dispatch tensor is (G, N, E, C) with G sharded over `data` and E
+    over `model` (the einsum against it becomes XLA's all-to-all). Matches
+    the GShard/MaxText "dropping" strategy. shard_fn(name, x) lets the model
+    annotate intermediate shardings.
+    """
+    g_, n, d = x3d.shape
+    e = mc.num_experts
+    cap = int(math.ceil(n * mc.top_k / e * mc.capacity_factor))
+    cap = max(8, -(-cap // 8) * 8)  # round up to 8 for lane alignment
+    cap = min(cap, n) if n >= 8 else cap
+    sf = shard_fn or (lambda name, a: a)
+
+    # position of each (token, rank) within its (group, expert) queue;
+    # earlier ranks get priority, matching GShard.
+    dispatch = jnp.zeros((g_, n, e, cap), x3d.dtype)
+    combine = jnp.zeros((g_, n, e, cap), jnp.float32)
+    counts = jnp.zeros((g_, 1, e), jnp.int32)
+    for r in range(mc.top_k):
+        mask_r = jax.nn.one_hot(idx[..., r], e, dtype=jnp.int32)   # (G,N,E)
+        pos_r = jnp.cumsum(mask_r, axis=1) - 1 + counts
+        counts = counts + mask_r.sum(axis=1, keepdims=True)
+        keep = (mask_r > 0) & (pos_r < cap)
+        oh = jax.nn.one_hot(jnp.where(keep, pos_r, -1), cap, dtype=x3d.dtype)
+        dispatch = dispatch + oh * mask_r[..., None].astype(x3d.dtype)
+        combine = combine + (oh.astype(jnp.float32)
+                             * (mask_r.astype(jnp.float32)
+                                * gates[..., r:r + 1])[..., None])
+    dispatch = sf("moe_dispatch", dispatch)
+    h_in = sf("moe_egcd", jnp.einsum("gnec,gnd->egcd", dispatch, x3d))
+    h_out = _expert_ffn(params, h_in.reshape(e, g_ * cap, d))
+    h_out = sf("moe_egcd", h_out.reshape(e, g_, cap, d))
+    # combine weights in activation dtype: halves the bytes of the combine
+    # einsum (gate precision is preserved — gates were computed in fp32)
+    return jnp.einsum("gnec,egcd->gnd", combine.astype(x3d.dtype), h_out)
+
+
+def _ragged_moe(params: Params, mc: MoEConfig, x2d, gates, idx):
+    """Dropless grouped-GEMM dispatch via sort + lax.ragged_dot."""
+    t, d = x2d.shape
+    e = mc.num_experts
+    k = mc.top_k
+    flat_e = idx.reshape(-1)                       # (T*k,)
+    order = jnp.argsort(flat_e)
+    tok = jnp.repeat(jnp.arange(t), k)[order]
+    w = gates.reshape(-1)[order]
+    xs = x2d[tok]                                  # (T*k, d) sorted by expert
+    group_sizes = jnp.bincount(flat_e, length=e).astype(jnp.int32)
+    g = jax.lax.ragged_dot(xs, params["w_gate"], group_sizes)
+    u = jax.lax.ragged_dot(xs, params["w_up"], group_sizes)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xs.dtype) * u
+    y = jax.lax.ragged_dot(h, params["w_down"], group_sizes)
+    y = y * w[:, None].astype(y.dtype)
+    return jnp.zeros_like(x2d).at[tok].add(y)
+
+
+def moe_apply(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+              shard_fn=None) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: (B, S, d) -> (B, S, d), aux losses."""
+    mc = cfg.moe
+    b, s, d = x.shape
+    x2d = x.reshape(b * s, d)
+    gates, idx, aux = _router(params, mc, x2d)
+    if mc.dispatch == "dense":
+        y = _dense_moe(params, mc, x2d, gates, idx)
+    elif mc.dispatch == "dropping":
+        # groups of <=4096 tokens: capacity (and the dispatch one-hot) stays
+        # bounded regardless of sequence length; one flat group at decode
+        if s > 1:
+            gsz = math.gcd(s, 4096)
+            g_, n = b * (s // gsz), gsz
+        else:
+            g_, n = 1, b * s
+        y = _dropping_moe(params, mc, x2d.reshape(g_, n, d),
+                          gates.reshape(g_, n, -1), idx.reshape(g_, n, -1),
+                          shard_fn)
+        y = y.reshape(b * s, d)
+    elif mc.dispatch == "ragged":
+        y = _ragged_moe(params, mc, x2d, gates, idx)
+    else:
+        raise ValueError(f"unknown moe dispatch {mc.dispatch!r}")
+    if mc.num_shared_experts:
+        from repro.models.layers import swiglu
+        y = y + swiglu(params["shared"], x2d)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,162 @@
+"""Mamba selective-SSM mixer [arXiv:2312.00752], TPU-adapted.
+
+Training/prefill uses a *chunked* scan: within a chunk the recurrence is
+materialized via an associative scan, chunks are stitched with a lax.scan
+carry. This bounds the (B, S, d_inner, d_state) intermediates to chunk
+length — the same blocking the Pallas `ssm_scan` kernel implements in VMEM.
+Decode carries {conv window, ssm state} and is O(1) per token.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+Params = Dict[str, Any]
+
+
+def _dims(cfg: ModelConfig):
+    mc = cfg.mamba
+    d_inner = mc.expand * cfg.d_model
+    dt_rank = mc.dt_rank or -(-cfg.d_model // 16)
+    return mc, d_inner, dt_rank
+
+
+def mamba_init(rng, cfg: ModelConfig) -> Params:
+    mc, di, dtr = _dims(cfg)
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(rng, 6)
+    # dt bias init so softplus(dt_bias) spans [1e-3, 1e-1] (mamba default)
+    u = jax.random.uniform(ks[0], (di,), jnp.float32)
+    dt_init = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = jnp.log(jnp.expm1(dt_init))  # inverse softplus
+    return {
+        "in_proj": dense_init(ks[1], d, 2 * di, dt),
+        "conv_w": (jax.random.normal(ks[2], (mc.d_conv, di), jnp.float32)
+                   / math.sqrt(mc.d_conv)).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": dense_init(ks[3], di, dtr + 2 * mc.d_state, dt),
+        "dt_proj": dense_init(ks[4], dtr, di, jnp.float32,
+                              scale=dtr ** -0.5),
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, mc.d_state + 1, dtype=jnp.float32), (di, mc.d_state))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], di, d, dt),
+    }
+
+
+def _causal_conv(x, w, b):
+    """x: (B,S,di); w: (K,di) depthwise causal conv."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    return out + b[None, None, :]
+
+
+def _ssm_inputs(params, cfg, x_conv):
+    """x_conv: (B,S,di) post-conv activations -> dt, B_t, C_t, A."""
+    mc, di, dtr = _dims(cfg)
+    x_db = jnp.einsum("bsd,de->bse", x_conv, params["x_proj"])
+    dt_low, b_t, c_t = jnp.split(x_db, [dtr, dtr + mc.d_state], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_low.astype(jnp.float32),
+                   params["dt_proj"]) + params["dt_bias"])         # (B,S,di) f32
+    a = -jnp.exp(params["A_log"])                                   # (di,ds) f32
+    return dt, b_t.astype(jnp.float32), c_t.astype(jnp.float32), a
+
+
+def _scan_chunk(decay, drive, h0):
+    """Associative scan within a chunk. decay/drive: (B,C,di,ds) f32."""
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+    a, h = jax.lax.associative_scan(combine, (decay, drive), axis=1)
+    # fold in the carried state: h_t += (prod decay_{1..t}) * h0
+    h = h + a * h0[:, None]
+    return h, h[:, -1]
+
+
+def mamba_mix(params: Params, cfg: ModelConfig, x, h0=None, conv0=None,
+              chunk: int = 0):
+    """x: (B,S,d). Returns (y, (h_last, conv_tail)) for cache handoff."""
+    mc, di, dtr = _dims(cfg)
+    chunk = chunk or mc.scan_chunk
+    b, s, _ = x.shape
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    if conv0 is not None:
+        x_ext = jnp.concatenate([conv0, x_in], axis=1)
+        x_conv = _causal_conv(x_ext, params["conv_w"], params["conv_b"])
+        x_conv = x_conv[:, conv0.shape[1]:]
+    else:
+        x_conv = _causal_conv(x_in, params["conv_w"], params["conv_b"])
+    x_conv = jax.nn.silu(x_conv.astype(jnp.float32)).astype(x.dtype)
+
+    ch = min(chunk, s)
+    assert s % ch == 0, (s, ch)
+    n = s // ch
+    h0 = h0 if h0 is not None else jnp.zeros((b, di, mc.d_state), jnp.float32)
+    a = -jnp.exp(params["A_log"])                                  # (di,ds) f32
+
+    def chunk_body(carry, xc_blk):
+        # compute dt/B/C and the (B,C,di,ds) decay/drive *inside* the chunk
+        # so the big 4-D intermediates never exceed chunk length
+        dt, b_blk, c_blk, _ = _ssm_inputs(params, cfg, xc_blk)
+        dec = jnp.exp(dt[..., None] * a[None, None])               # (B,C,di,ds)
+        drv = (dt[..., None] * b_blk[:, :, None, :]
+               * xc_blk.astype(jnp.float32)[..., None])
+        h, last = _scan_chunk(dec, drv, carry)
+        y = jnp.einsum("bcds,bcs->bcd", h, c_blk)
+        y = y + params["D"][None, None] * xc_blk.astype(jnp.float32)
+        return last, y
+
+    blocks = x_conv.reshape(b, n, ch, di).swapaxes(0, 1)
+    h_last, ys = jax.lax.scan(chunk_body, h0, blocks)
+    y = ys.swapaxes(0, 1).reshape(b, s, di).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", y, params["out_proj"])
+    conv_tail = (jnp.concatenate([conv0, x_in], axis=1)[:, -(mc.d_conv - 1):]
+                 if conv0 is not None else x_in[:, -(mc.d_conv - 1):])
+    return out, (h_last, conv_tail)
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=None) -> Params:
+    mc, di, _ = _dims(cfg)
+    dt = dtype or jnp.dtype(cfg.param_dtype)
+    return {
+        "h": jnp.zeros((batch, di, mc.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, mc.d_conv - 1, di), dt),
+    }
+
+
+def mamba_decode(params: Params, cfg: ModelConfig, x, cache: Params
+                 ) -> Tuple[jnp.ndarray, Params]:
+    """x: (B,1,d); O(1) recurrent step."""
+    mc, di, dtr = _dims(cfg)
+    b = x.shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)                            # (B,1,di)
+    window = jnp.concatenate([cache["conv"], x_in], axis=1)        # (B,K,di)
+    x_conv = (jnp.einsum("bkd,kd->bd", window, params["conv_w"])
+              + params["conv_b"])[:, None]
+    x_conv = jax.nn.silu(x_conv.astype(jnp.float32)).astype(x.dtype)
+    dt, b_t, c_t, a = _ssm_inputs(params, cfg, x_conv)
+    decay = jnp.exp(dt[..., None] * a[None, None])[:, 0]           # (B,di,ds)
+    drive = (dt[..., None] * b_t[:, :, None, :]
+             * x_conv.astype(jnp.float32)[..., None])[:, 0]
+    h = decay * cache["h"] + drive
+    y = jnp.einsum("bds,bs->bd", h, c_t[:, 0])
+    y = y + params["D"][None] * x_conv[:, 0].astype(jnp.float32)
+    y = y[:, None].astype(x.dtype) * jax.nn.silu(
+        z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", y, params["out_proj"])
+    return out, {"h": h, "conv": window[:, 1:]}

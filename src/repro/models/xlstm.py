@@ -1,0 +1,319 @@
+"""xLSTM mixers [arXiv:2405.04517]: mLSTM (matrix memory, chunkwise-parallel
+training form) and sLSTM (scalar memory with exponential gating, sequential).
+
+mLSTM training runs in the stabilized *chunkwise* form (TFLA-style): intra-
+chunk quadratic D-matrix attention + an inter-chunk carried matrix state
+(C, n, m). This keeps every intermediate O(S * chunk) instead of O(S^2) and
+is exactly the tiling the Pallas `mlstm_scan` kernel implements. Decode is
+the O(1) recurrent update.
+
+sLSTM has inherently sequential memory mixing (block-diagonal recurrent
+matrix), so training uses lax.scan over time; decode is one step.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+Params = Dict[str, Any]
+NEG = -1e30
+
+
+def _mlstm_dims(cfg: ModelConfig):
+    xc = cfg.xlstm
+    di = int(xc.proj_factor_mlstm * cfg.d_model)
+    h = cfg.num_heads
+    return xc, di, h, di // h
+
+
+# ============================================================== mLSTM cell
+
+def mlstm_init(rng, cfg: ModelConfig) -> Params:
+    xc, di, h, hd = _mlstm_dims(cfg)
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(rng, 7)
+    return {
+        "up": dense_init(ks[0], d, 2 * di, dt),
+        "conv_w": (jax.random.normal(ks[1], (xc.conv1d_kernel, di), jnp.float32)
+                   / math.sqrt(xc.conv1d_kernel)).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "w_q": dense_init(ks[2], di, di, dt),
+        "w_k": dense_init(ks[3], di, di, dt),
+        "w_v": dense_init(ks[4], di, di, dt),
+        "w_if": dense_init(ks[5], di, 2 * h, jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((h,)), 3.0 * jnp.ones((h,))]),
+        "norm_scale": jnp.ones((di,), dt),
+        "down": dense_init(ks[6], di, d, dt),
+    }
+
+
+def _causal_conv(x, w, b):
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return out + b[None, None, :]
+
+
+def _mlstm_qkvgates(params, cfg, x_m, conv0=None):
+    """x_m: (B,S,di) up-projected input -> q,k,v (B,S,H,hd), log_i/log_f (B,S,H)."""
+    xc, di, h, hd = _mlstm_dims(cfg)
+    b, s, _ = x_m.shape
+    if conv0 is not None:
+        ext = jnp.concatenate([conv0, x_m], axis=1)
+        c = _causal_conv(ext, params["conv_w"], params["conv_b"])[:, conv0.shape[1]:]
+    else:
+        c = _causal_conv(x_m, params["conv_w"], params["conv_b"])
+    c = jax.nn.silu(c.astype(jnp.float32)).astype(x_m.dtype)
+    q = jnp.einsum("bsd,de->bse", c, params["w_q"]).reshape(b, s, h, hd)
+    k = jnp.einsum("bsd,de->bse", c, params["w_k"]).reshape(b, s, h, hd)
+    v = jnp.einsum("bsd,de->bse", x_m, params["w_v"]).reshape(b, s, h, hd)
+    gates = (jnp.einsum("bsd,de->bse", c.astype(jnp.float32), params["w_if"])
+             + params["b_if"])
+    log_i = gates[..., :h]                       # exponential input gate (log)
+    log_f = jax.nn.log_sigmoid(gates[..., h:])   # sigmoid forget gate (log)
+    return q, k, v, log_i, log_f
+
+
+def _mlstm_chunk(q, k, v, log_i, log_f, state, scale):
+    """One chunk of the stabilized chunkwise mLSTM.
+
+    q,k,v: (B,C,H,hd); log_i/log_f: (B,C,H); state = (C_mat, n, m) with
+    C_mat (B,H,hd,hd), n (B,H,hd), m (B,H). Returns (y, new_state).
+    """
+    c_mat, n_vec, m_run = state
+    b, c, h, hd = q.shape
+    bcum = jnp.cumsum(log_f, axis=1)                               # (B,C,H)
+    # intra-chunk log decay matrix: b_i - b_j + log_i_j for j <= i
+    logd = (bcum[:, :, None, :] - bcum[:, None, :, :]
+            + log_i[:, None, :, :])                                # (B,i,j,H)
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    logd = jnp.where(tri[None, :, :, None], logd, NEG)
+    # state contribution decay for row i: bcum_i (+ m_run)
+    m_intra = logd.max(axis=2)                                     # (B,C,H)
+    m_new = jnp.maximum(m_intra, bcum + m_run[:, None, :])         # (B,C,H)
+    w_intra = jnp.exp(logd - m_new[:, :, None, :])                 # (B,i,j,H)
+    w_state = jnp.exp(bcum + m_run[:, None, :] - m_new)            # (B,C,H)
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bihd,bjhd->bijh", qf, kf) * w_intra
+    num = (jnp.einsum("bijh,bjhd->bihd", scores, vf)
+           + w_state[..., None] * jnp.einsum("bihd,bhde->bihe", qf, c_mat))
+    den_raw = (scores.sum(axis=2)
+               + w_state * jnp.einsum("bihd,bhd->bih", qf, n_vec))
+    den = jnp.maximum(jnp.abs(den_raw), jnp.exp(-m_new))
+    y = num / den[..., None]                                       # (B,C,H,hd)
+
+    # carry state to the end of the chunk
+    btot = bcum[:, -1, :]                                          # (B,H)
+    m_next = jnp.maximum(btot + m_run,
+                         (btot[:, None] - bcum + log_i).max(axis=1))
+    w_upd = jnp.exp(btot[:, None] - bcum + log_i - m_next[:, None])  # (B,C,H)
+    c_next = (jnp.exp(btot + m_run - m_next)[:, :, None, None] * c_mat
+              + jnp.einsum("bch,bchd,bche->bhde", w_upd, kf, vf))
+    n_next = (jnp.exp(btot + m_run - m_next)[:, :, None] * n_vec
+              + jnp.einsum("bch,bchd->bhd", w_upd, kf))
+    return y, (c_next, n_next, m_next)
+
+
+def mlstm_mix(params: Params, cfg: ModelConfig, x, state=None, conv0=None,
+              chunk: int = 256):
+    """x: (B,S,d) -> (out, (state, conv_tail))."""
+    xc, di, h, hd = _mlstm_dims(cfg)
+    b, s, _ = x.shape
+    xz = jnp.einsum("bsd,de->bse", x, params["up"])
+    x_m, z = jnp.split(xz, 2, axis=-1)
+    q, k, v, log_i, log_f = _mlstm_qkvgates(params, cfg, x_m, conv0)
+    ch = min(chunk, s)
+    assert s % ch == 0
+    n = s // ch
+    scale = 1.0 / math.sqrt(hd)
+    if state is None:
+        state = (jnp.zeros((b, h, hd, hd), jnp.float32),
+                 jnp.zeros((b, h, hd), jnp.float32),
+                 jnp.zeros((b, h), jnp.float32))
+
+    def body(carry, blk):
+        y, new = _mlstm_chunk(*blk, carry, scale)
+        return new, y
+
+    blocks = tuple(a.reshape(b, n, ch, *a.shape[2:]).swapaxes(0, 1)
+                   for a in (q, k, v, log_i, log_f))
+    state, ys = jax.lax.scan(body, state, blocks)
+    y = ys.swapaxes(0, 1).reshape(b, s, di).astype(x.dtype)
+    # per-head group norm then output gating
+    yf = y.astype(jnp.float32).reshape(b, s, h, hd)
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, axis=-1, keepdims=True) + 1e-6)
+    y = (yf.reshape(b, s, di) * params["norm_scale"].astype(jnp.float32)
+         ).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", y, params["down"])
+    kk = xc.conv1d_kernel - 1
+    conv_tail = (jnp.concatenate([conv0, x_m], axis=1)[:, -kk:]
+                 if conv0 is not None else x_m[:, -kk:])
+    return out, (state, conv_tail)
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype=None) -> Params:
+    xc, di, h, hd = _mlstm_dims(cfg)
+    dt = dtype or jnp.dtype(cfg.param_dtype)
+    return {
+        "C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.zeros((batch, h), jnp.float32),
+        "conv": jnp.zeros((batch, xc.conv1d_kernel - 1, di), dt),
+    }
+
+
+def mlstm_decode(params: Params, cfg: ModelConfig, x, cache: Params):
+    """x: (B,1,d) O(1) step (chunk of length 1 through the same math)."""
+    xc, di, h, hd = _mlstm_dims(cfg)
+    b = x.shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, params["up"])
+    x_m, z = jnp.split(xz, 2, axis=-1)
+    window = jnp.concatenate([cache["conv"], x_m], axis=1)
+    q, k, v, log_i, log_f = _mlstm_qkvgates(
+        params, cfg, x_m, conv0=cache["conv"])
+    state = (cache["C"], cache["n"], cache["m"])
+    y, (c_new, n_new, m_new) = _mlstm_chunk(
+        q, k, v, log_i, log_f, state, 1.0 / math.sqrt(hd))
+    yf = y.astype(jnp.float32)
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, axis=-1, keepdims=True) + 1e-6)
+    y = (yf.reshape(b, 1, di) * params["norm_scale"].astype(jnp.float32)
+         ).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", y, params["down"])
+    return out, {"C": c_new, "n": n_new, "m": m_new, "conv": window[:, 1:]}
+
+
+# ============================================================== sLSTM cell
+
+def _slstm_dims(cfg: ModelConfig):
+    xc = cfg.xlstm
+    h = xc.num_heads_slstm
+    return xc, h, cfg.d_model // h
+
+
+def slstm_init(rng, cfg: ModelConfig) -> Params:
+    xc, h, hd = _slstm_dims(cfg)
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    f = int(xc.proj_factor_slstm * d)
+    ks = jax.random.split(rng, 6)
+    return {
+        "conv_w": (jax.random.normal(ks[0], (xc.conv1d_kernel, d), jnp.float32)
+                   / math.sqrt(xc.conv1d_kernel)).astype(dt),
+        "conv_b": jnp.zeros((d,), dt),
+        "w_in": dense_init(ks[1], d, 4 * d, jnp.float32),
+        "r_rec": (jax.random.normal(ks[2], (h, hd, 4 * hd), jnp.float32)
+                  / math.sqrt(hd)),
+        "b": jnp.concatenate([jnp.zeros((d,)), 3.0 * jnp.ones((d,)),
+                              jnp.zeros((2 * d,))]),
+        "norm_scale": jnp.ones((d,), dt),
+        "up": dense_init(ks[3], d, 2 * f, dt),
+        "down": dense_init(ks[4], f, d, dt),
+    }
+
+
+def _slstm_step(params, h_cfg, carry, pre, conv_t):
+    """carry: (c, n, m, h_prev) each (B,H,hd); pre (B,4d) = x_t @ W + b
+    precomputed OUTSIDE the scan (one big MXU GEMM over the whole sequence
+    instead of 4096 small per-step GEMMs — the per-step loop then only does
+    the unavoidable recurrent R matmul + pointwise gates); conv_t (B,d)."""
+    h, hd = h_cfg
+    c_st, n_st, m_st, h_prev = carry
+    b = pre.shape[0]
+    rec = jnp.einsum("bhx,hxe->bhe", h_prev, params["r_rec"])       # (B,H,4hd)
+    pre = pre.reshape(b, 4, h, hd) + rec.reshape(b, h, 4, hd).swapaxes(1, 2)
+    i_pre, f_pre, z_pre, o_pre = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    # conv branch modulates i/f gates (xLSTM feeds conv activations to i/f)
+    i_pre = i_pre + conv_t.astype(jnp.float32).reshape(b, h, hd)
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + m_st, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + m_st - m_new)
+    c_new = f_g * c_st + i_g * jnp.tanh(z_pre)
+    n_new = f_g * n_st + i_g
+    h_new = jax.nn.sigmoid(o_pre) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new)
+
+
+def slstm_mix(params: Params, cfg: ModelConfig, x, state=None, conv0=None):
+    """x: (B,S,d). Sequential lax.scan over time (memory mixing is
+    inherently recurrent). Returns (out, (state, conv_tail))."""
+    xc, h, hd = _slstm_dims(cfg)
+    b, s, d = x.shape
+    if conv0 is not None:
+        ext = jnp.concatenate([conv0, x], axis=1)
+        conv = _causal_conv(ext, params["conv_w"], params["conv_b"])[:, conv0.shape[1]:]
+    else:
+        conv = _causal_conv(x, params["conv_w"], params["conv_b"])
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    if state is None:
+        z = jnp.zeros((b, h, hd), jnp.float32)
+        state = (z, z, jnp.full((b, h, hd), NEG, jnp.float32), z)
+
+    # hoist the input projection: one (B*S, d) x (d, 4d) GEMM
+    pre_all = (jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                          params["w_in"]) + params["b"])
+
+    def body(carry, xs):
+        pre_t, c_t = xs
+        new = _slstm_step(params, (h, hd), carry, pre_t, c_t)
+        return new, new[3]
+
+    state, hs = jax.lax.scan(body, state,
+                             (pre_all.swapaxes(0, 1), conv.swapaxes(0, 1)))
+    y = hs.swapaxes(0, 1).reshape(b, s, d)
+    yf = y.reshape(b, s, h, hd)
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, axis=-1, keepdims=True) + 1e-6)
+    y = (yf.reshape(b, s, d) * params["norm_scale"].astype(jnp.float32)
+         ).astype(x.dtype)
+    # post up/down GLU
+    g, u = jnp.split(jnp.einsum("bsd,de->bse", y, params["up"]), 2, axis=-1)
+    y = jax.nn.gelu(g.astype(jnp.float32)).astype(x.dtype) * u
+    out = jnp.einsum("bsf,fd->bsd", y, params["down"])
+    kk = xc.conv1d_kernel - 1
+    conv_tail = (jnp.concatenate([conv0, x], axis=1)[:, -kk:]
+                 if conv0 is not None else x[:, -kk:])
+    return out, (state, conv_tail)
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int, dtype=None) -> Params:
+    xc, h, hd = _slstm_dims(cfg)
+    dt = dtype or jnp.dtype(cfg.param_dtype)
+    z = jnp.zeros((batch, h, hd), jnp.float32)
+    return {"c": z, "n": z, "m": jnp.full((batch, h, hd), NEG, jnp.float32),
+            "h": z, "conv": jnp.zeros((batch, xc.conv1d_kernel - 1, cfg.d_model), dt)}
+
+
+def slstm_decode(params: Params, cfg: ModelConfig, x, cache: Params):
+    xc, h, hd = _slstm_dims(cfg)
+    b, _, d = x.shape
+    window = jnp.concatenate([cache["conv"], x], axis=1)
+    conv = (jnp.einsum("bkd,kd->bd", window, params["conv_w"])
+            + params["conv_b"])[:, None]
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    carry = (cache["c"], cache["n"], cache["m"], cache["h"])
+    pre = (jnp.einsum("bd,de->be", x[:, 0].astype(jnp.float32),
+                      params["w_in"]) + params["b"])
+    c_new, n_new, m_new, h_new = _slstm_step(
+        params, (h, hd), carry, pre, conv[:, 0])
+    y = h_new.reshape(b, 1, d)
+    yf = y.reshape(b, 1, h, hd)
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, axis=-1, keepdims=True) + 1e-6)
+    y = (yf.reshape(b, 1, d) * params["norm_scale"].astype(jnp.float32)
+         ).astype(x.dtype)
+    g, u = jnp.split(jnp.einsum("bsd,de->bse", y, params["up"]), 2, axis=-1)
+    y = jax.nn.gelu(g.astype(jnp.float32)).astype(x.dtype) * u
+    out = jnp.einsum("bsf,fd->bsd", y, params["down"])
+    return out, {"c": c_new, "n": n_new, "m": m_new, "h": h_new,
+                 "conv": window[:, 1:]}

@@ -1,0 +1,3 @@
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,  # noqa: F401
+                               clip_by_global_norm, cosine_schedule,
+                               global_norm)

@@ -1,0 +1,84 @@
+"""AdamW from scratch (no optax dependency), with configurable moment dtype
+(fp32 for small models, bf16 for the 100B+ configs so optimizer state fits
+16 GB/chip — recorded per-arch in the dry-run table) and fused global-norm
+clipping. Update math always runs in fp32.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"
+
+
+def adamw_init(params, state_dtype: str = "float32") -> Dict[str, Any]:
+    dt = jnp.dtype(state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        tree), norm
+
+
+def adamw_update(cfg: AdamWConfig, grads, opt_state, params, lr_scale=1.0
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = opt_state["step"] + 1
+    sf = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** sf
+    bc2 = 1.0 - cfg.b2 ** sf
+    lr = cfg.lr * lr_scale
+    sd = jnp.dtype(cfg.state_dtype)
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        mf = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
+        vf = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * gf * gf
+        mh = mf / bc1
+        vh = vf / bc2
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * pf)
+        return pf.astype(p.dtype), mf.astype(sd), vf.astype(sd)
+
+    out = jax.tree.map(upd, grads, opt_state["m"], opt_state["v"], params)
+    treedef = jax.tree.structure(params)
+    leaves = treedef.flatten_up_to(out)
+    new_p = treedef.unflatten([l[0] for l in leaves])
+    new_m = treedef.unflatten([l[1] for l in leaves])
+    new_v = treedef.unflatten([l[2] for l in leaves])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, {"grad_norm": gnorm}
+
+
+def cosine_schedule(step, *, peak_lr_scale=1.0, warmup=100, total=10_000,
+                    min_frac=0.1):
+    sf = step.astype(jnp.float32)
+    warm = sf / jnp.maximum(warmup, 1)
+    prog = jnp.clip((sf - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return peak_lr_scale * jnp.where(sf < warmup, warm, cos)

@@ -1,0 +1,93 @@
+"""Serving engine: batched prefill + iteration-batched greedy decode.
+
+Design: requests are grouped into *waves*. A wave's prompts share one
+batched prefill (equal prompt lengths per wave — the batcher groups by
+length), then all lanes decode in lock-step with a single jitted
+decode_step per token (one shared position clock, so the KV-cache write
+slot is uniform across lanes — this is what keeps decode a single SPMD
+program). Lanes that reach their token budget are masked out but keep
+riding the batch until the wave drains; new requests start the next wave.
+
+This is iteration-level batching (Orca-style) with aligned positions; a
+vLLM-style paged KV cache with per-lane clocks is noted as future work in
+DESIGN.md. The request intake/response path runs as repro.core tasks in
+examples/serve_llm.py, giving the serving loop the paper's R1/R2
+properties (async admission, wait-driven completion).
+"""
+from __future__ import annotations
+
+import time
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray                  # (S,) int32
+    max_new_tokens: int = 16
+    created: float = field(default_factory=time.perf_counter)
+
+
+@dataclass
+class Response:
+    request_id: int
+    tokens: List[int]
+    latency_s: float
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, max_seq: int = 512):
+        self.model = model
+        self.params = params
+        self.max_seq = max_seq
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, max_seq=max_seq))
+        self._decode = jax.jit(model.decode_step)
+
+    def _run_wave(self, wave: List[Request]) -> List[Response]:
+        prompts = np.stack([r.prompt for r in wave])        # equal lengths
+        b, s = prompts.shape
+        budgets = np.array([r.max_new_tokens for r in wave])
+        logits, cache = self._prefill(self.params,
+                                      {"tokens": jnp.asarray(prompts)})
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        outs: List[List[int]] = [[] for _ in wave]
+        for step in range(int(budgets.max())):
+            alive = step < budgets
+            host_tok = np.asarray(tok)[:, 0]
+            for i in range(b):
+                if alive[i]:
+                    outs[i].append(int(host_tok[i]))
+            if step == budgets.max() - 1 or s + step >= self.max_seq - 1:
+                break
+            logits, cache = self._decode(self.params, cache, tok,
+                                         jnp.int32(s + step))
+            tok = jnp.argmax(logits[:, 0], axis=-1)[:, None].astype(jnp.int32)
+        now = time.perf_counter()
+        return [Response(r.request_id, o, now - r.created)
+                for r, o in zip(wave, outs)]
+
+    def serve(self, requests: List[Request], max_wave: int = 8
+              ) -> List[Response]:
+        """Group by prompt length, run length-aligned waves."""
+        by_len: Dict[int, List[Request]] = defaultdict(list)
+        for r in requests:
+            by_len[len(r.prompt)].append(r)
+        responses: List[Response] = []
+        for _, group in sorted(by_len.items()):
+            for i in range(0, len(group), max_wave):
+                responses.extend(self._run_wave(group[i:i + max_wave]))
+        return responses
+
+    def generate(self, prompt: np.ndarray, max_new_tokens: int = 16
+                 ) -> List[int]:
+        r = Request(0, np.asarray(prompt, np.int32), max_new_tokens)
+        return self._run_wave([r])[0].tokens

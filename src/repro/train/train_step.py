@@ -1,0 +1,99 @@
+"""train_step factory: fwd + bwd + global-norm clip + AdamW, pjit-ready.
+
+The returned function is pure: (params, opt_state, batch) -> (params,
+opt_state, metrics). Gradient compression (int8 + error feedback) hooks in
+here when enabled (repro.parallel.compression).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.optim.adamw import AdamWConfig, adamw_update, cosine_schedule
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    grad_compression=None) -> Callable:
+    """fwd+bwd+clip+AdamW. If cfg.train_microbatch is set, the global batch
+    is split and gradients accumulate over a lax.scan of microbatches
+    (activation memory scales with the microbatch, not the global batch)."""
+    micro = model.cfg.train_microbatch
+
+    def _constrain_like_params(tree):
+        """Pin accumulated-gradient shardings to the parameter shardings so
+        XLA reduce-scatters per microbatch instead of all-reducing."""
+        rules = model.rules
+        if rules is None:
+            return tree
+        import jax.tree_util as jtu
+        from jax.sharding import NamedSharding
+
+        def one(path, leaf):
+            pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                            for p in path)
+            return jax.lax.with_sharding_constraint(
+                leaf, NamedSharding(rules.mesh,
+                                    rules._param_spec(pstr, leaf.shape)))
+        return jtu.tree_map_with_path(one, tree)
+
+    def _grads(params, batch):
+        return jax.value_and_grad(model.loss_fn, has_aux=True)(params, batch)
+
+    def train_step(params, opt_state, batch):
+        gb = jax.tree.leaves(batch)[0].shape[0]
+        if micro and micro < gb:
+            assert gb % micro == 0, (gb, micro)
+            n = gb // micro
+            stacked = jax.tree.map(
+                lambda x: x.reshape(n, micro, *x.shape[1:]), batch)
+
+            # accumulator dtype follows the optimizer-state dtype (fp32 for
+            # small models; bf16 for the 100B+ archs where an fp32 grad
+            # buffer alone would exceed HBM)
+            acc_dt = jnp.dtype(model.cfg.opt_state_dtype)
+
+            def acc_body(carry, mb):
+                g_acc, loss_acc, aux_acc = carry
+                (loss, aux), g = _grads(params, mb)
+                g = _constrain_like_params(g)
+                # cast BEFORE scaling: the cross-data psum of each
+                # microbatch's grads then happens in the accumulator dtype
+                # (bf16 for the 100B+ archs) instead of f32 — halves the
+                # dominant all-reduce bytes (see EXPERIMENTS.md §Perf)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(acc_dt) / jnp.asarray(
+                        n, acc_dt),
+                    g_acc, g)
+                return (g_acc, loss_acc + loss / n,
+                        {k: aux_acc[k] + aux[k] / n for k in aux_acc}), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+            aux0 = {"xent": jnp.zeros(()), "moe_lb_loss": jnp.zeros(()),
+                    "moe_z_loss": jnp.zeros(())}
+            (grads, loss, aux), _ = jax.lax.scan(
+                acc_body, (g0, jnp.zeros(()), aux0), stacked)
+            grads = jax.tree.map(lambda g, p: g.astype(p.dtype), grads,
+                                 params)
+        else:
+            (loss, aux), grads = _grads(params, batch)
+        if grad_compression is not None:
+            grads = grad_compression(grads)
+        lr_scale = cosine_schedule(opt_state["step"])
+        params, opt_state, opt_metrics = adamw_update(
+            opt_cfg, grads, opt_state, params, lr_scale)
+        metrics = {"loss": loss, "xent": aux.get("xent", loss),
+                   "moe_lb_loss": aux.get("moe_lb_loss", jnp.zeros(())),
+                   **opt_metrics}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model) -> Callable:
+    def eval_step(params, batch):
+        loss, aux = model.loss_fn(params, batch)
+        return {"loss": loss, "xent": aux.get("xent", loss)}
+    return eval_step

@@ -1,0 +1,163 @@
+"""Trainers.
+
+`Trainer` — classic synchronous loop (jit step, prefetch, periodic async
+checkpoint), runs on whatever mesh is active.
+
+`AsyncTrainer` — the paper's architecture applied to training: every
+pipeline stage is a *task* in the repro.core runtime (data-load tasks,
+train-step tasks, async checkpoint tasks, eval tasks), composed through
+futures, so data loading / checkpointing / evaluation overlap the step and
+the whole loop inherits lineage-replay fault tolerance: kill a node
+mid-run and training continues, re-executing lost work (the batch loader
+is a pure function of the step index, so replay is exact).
+
+Straggler mitigation: with `backup_tasks=True` the trainer launches the
+step's data-load on two nodes and `wait`s for the first (the paper's wait
+primitive, §3.1.5).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.core import api
+from repro.data.pipeline import DataConfig, Prefetcher, batch_for_step
+from repro.models.model import Model
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.train.train_step import make_train_step
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    log_every: int = 10
+    opt: AdamWConfig = AdamWConfig()
+
+
+class Trainer:
+    def __init__(self, model: Model, data_cfg: DataConfig,
+                 cfg: TrainerConfig):
+        self.model = model
+        self.data_cfg = data_cfg
+        self.cfg = cfg
+        self.step_fn = jax.jit(make_train_step(model, cfg.opt),
+                               donate_argnums=(0, 1))
+        self.ckpt = (Checkpointer(cfg.checkpoint_dir)
+                     if cfg.checkpoint_dir else None)
+
+    def init_state(self, seed: int = 0):
+        params = self.model.init(jax.random.PRNGKey(seed))
+        opt_state = adamw_init(params, self.cfg.opt.state_dtype)
+        return params, opt_state
+
+    def restore_or_init(self, seed: int = 0):
+        params, opt_state = self.init_state(seed)
+        start = 0
+        if self.ckpt and self.ckpt.latest_step() is not None:
+            state = self.ckpt.restore({"params": params, "opt": opt_state})
+            params, opt_state = state["params"], state["opt"]
+            start = self.ckpt.latest_step()
+        return params, opt_state, start
+
+    def run(self, seed: int = 0) -> Dict[str, Any]:
+        params, opt_state, start = self.restore_or_init(seed)
+        pf = Prefetcher(self.data_cfg, start_step=start)
+        losses = []
+        t0 = time.perf_counter()
+        try:
+            for step in range(start, self.cfg.steps):
+                batch = pf.next()
+                params, opt_state, metrics = self.step_fn(params, opt_state,
+                                                          batch)
+                if step % self.cfg.log_every == 0 or \
+                        step == self.cfg.steps - 1:
+                    loss = float(metrics["loss"])
+                    losses.append((step, loss))
+                if self.ckpt and (step + 1) % self.cfg.checkpoint_every == 0:
+                    self.ckpt.save(step + 1,
+                                   {"params": params, "opt": opt_state},
+                                   blocking=False)
+        finally:
+            pf.close()
+            if self.ckpt:
+                self.ckpt.wait()
+        return {"losses": losses, "params": params, "opt": opt_state,
+                "wall_s": time.perf_counter() - t0}
+
+
+class AsyncTrainer:
+    """Training driven through the repro.core dataflow runtime."""
+
+    def __init__(self, model: Model, data_cfg: DataConfig, cfg: TrainerConfig,
+                 backup_tasks: bool = False):
+        self.model = model
+        self.data_cfg = data_cfg
+        self.cfg = cfg
+        self.backup_tasks = backup_tasks
+        step_fn = jax.jit(make_train_step(model, cfg.opt))
+        data_cfg_ref = data_cfg
+
+        @api.remote
+        def load_batch(step: int):
+            return batch_for_step(data_cfg_ref, step)
+
+        @api.remote(resources={"tpu": 1.0})
+        def train_step_task(state, batch):
+            params, opt_state = state
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            return (params, opt_state), {k: float(v)
+                                         for k, v in metrics.items()}
+
+        @api.remote
+        def save_ckpt(step, state, directory):
+            Checkpointer(directory).save(step, {"params": state[0],
+                                                "opt": state[1]})
+            return step
+
+        self._load_batch = load_batch
+        self._train_step = train_step_task
+        self._save = save_ckpt
+
+    def run(self, seed: int = 0, start_step: int = 0) -> Dict[str, Any]:
+        params = self.model.init(jax.random.PRNGKey(seed))
+        opt_state = adamw_init(params, self.cfg.opt.state_dtype)
+        state_ref = api.put((params, opt_state))
+        ckpt_refs = []
+        metrics_ref = None
+        losses = []
+
+        # pipeline: batch t+1 loads while step t runs (futures as deps)
+        batch_refs = {start_step: self._submit_load(start_step)}
+        for step in range(start_step, self.cfg.steps):
+            if step + 1 < self.cfg.steps:
+                batch_refs[step + 1] = self._submit_load(step + 1)
+            out = self._train_step.options(num_returns=2).submit(
+                state_ref, batch_refs.pop(step))
+            state_ref, metrics_ref = out
+            if self.cfg.checkpoint_dir and \
+                    (step + 1) % self.cfg.checkpoint_every == 0:
+                ckpt_refs.append(self._save.submit(
+                    step + 1, state_ref, self.cfg.checkpoint_dir))
+            if step % self.cfg.log_every == 0:
+                losses.append((step, api.get(metrics_ref)["loss"]))
+        final_metrics = api.get(metrics_ref) if metrics_ref else {}
+        if ckpt_refs:
+            api.get(ckpt_refs)  # ensure checkpoints are durable
+        losses.append((self.cfg.steps - 1, final_metrics.get("loss")))
+        return {"losses": losses, "state_ref": state_ref}
+
+    def _submit_load(self, step: int):
+        if not self.backup_tasks:
+            return self._load_batch.submit(step)
+        # straggler mitigation: duplicate the load, take the first done
+        a = self._load_batch.submit(step)
+        b = self._load_batch.submit(step)
+        done, _ = api.wait([a, b], num_returns=1)
+        return done[0]

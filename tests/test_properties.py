@@ -1,0 +1,139 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.simulator import ClusterSim, SimTask
+from repro.kernels.flash_attention import attention_ref
+from repro.parallel.compression import (compress_grads, dequantize_int8,
+                                        init_error_feedback, quantize_int8)
+
+SET = dict(max_examples=25, deadline=None)
+
+
+# ------------------------------------------------------- attention math
+
+@given(s=st.integers(4, 24), hd=st.sampled_from([8, 16]),
+       seed=st.integers(0, 2**16))
+@settings(**SET)
+def test_causality_no_future_leakage(s, hd, seed):
+    """Output at position t must not depend on tokens after t."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (1, 1, s, hd))
+    k = jax.random.normal(ks[1], (1, 1, s, hd))
+    v = jax.random.normal(ks[2], (1, 1, s, hd))
+    out = attention_ref(q, k, v, causal=True)
+    t = s // 2
+    k2 = k.at[:, :, t + 1:].set(jax.random.normal(ks[3], (1, 1, s - t - 1, hd)))
+    v2 = v.at[:, :, t + 1:].set(0.0)
+    out2 = attention_ref(q, k2, v2, causal=True)
+    np.testing.assert_allclose(np.asarray(out[:, :, :t + 1]),
+                               np.asarray(out2[:, :, :t + 1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(s=st.integers(4, 24), w=st.integers(1, 8), seed=st.integers(0, 2**16))
+@settings(**SET)
+def test_window_attention_equals_full_when_window_covers(s, w, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, 1, s, 8))
+    k = jax.random.normal(ks[1], (1, 1, s, 8))
+    v = jax.random.normal(ks[2], (1, 1, s, 8))
+    full = attention_ref(q, k, v, causal=True)
+    win = attention_ref(q, k, v, causal=True, window=s + w)  # window >= s
+    np.testing.assert_allclose(np.asarray(full), np.asarray(win),
+                               rtol=1e-6, atol=1e-6)
+
+
+@given(scale=st.floats(0.01, 100.0), seed=st.integers(0, 2**16))
+@settings(**SET)
+def test_attention_softmax_scale_invariance_of_shape(scale, seed):
+    """Attention output is a convex combination of V rows: bounded by V."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, 1, 8, 8)) * scale
+    k = jax.random.normal(ks[1], (1, 1, 8, 8))
+    v = jax.random.normal(ks[2], (1, 1, 8, 8))
+    out = np.asarray(attention_ref(q, k, v, causal=True))
+    vmax = np.max(np.abs(np.asarray(v)))
+    assert np.all(np.abs(out) <= vmax + 1e-4)
+
+
+# ------------------------------------------------------- quantization
+
+@given(seed=st.integers(0, 2**16), scale=st.floats(1e-3, 1e3))
+@settings(**SET)
+def test_int8_roundtrip_error_bound(seed, scale):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * scale
+    q, s = quantize_int8(x)
+    err = jnp.abs(dequantize_int8(q, s) - x)
+    assert float(jnp.max(err)) <= float(s) / 2 + 1e-6
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(**SET)
+def test_error_feedback_preserves_sum(seed):
+    """Over many steps, compressed grads + error feedback telescope: the
+    accumulated applied update approaches the accumulated true gradient."""
+    g = {"w": jax.random.normal(jax.random.PRNGKey(seed), (32,))}
+    efb = init_error_feedback(g)
+    applied = jnp.zeros((32,))
+    for i in range(20):
+        cg, efb = compress_grads(g, efb)
+        applied = applied + cg["w"]
+    true = 20 * g["w"]
+    resid = efb["w"]
+    np.testing.assert_allclose(np.asarray(applied + resid), np.asarray(true),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ------------------------------------------------------- scheduler (DES)
+
+@given(n_tasks=st.integers(1, 200), n_nodes=st.integers(1, 16),
+       seed=st.integers(0, 1000))
+@settings(**SET)
+def test_des_conservation(n_tasks, n_nodes, seed):
+    """Every submitted task finishes exactly once (no loss, no dupes)."""
+    sim = ClusterSim(n_nodes, workers_per_node=2, seed=seed)
+    for i in range(n_tasks):
+        sim.submit(SimTask(i, 1e-3, i % n_nodes), at=0.0)
+    sim.run()
+    ids = [t.task_id for t in sim.finished]
+    assert sorted(ids) == list(range(n_tasks))
+
+
+@given(n_tasks=st.integers(10, 150), kill_at=st.floats(0.001, 0.05),
+       seed=st.integers(0, 1000))
+@settings(**SET)
+def test_des_failure_replay_completes_all(n_tasks, kill_at, seed):
+    sim = ClusterSim(8, workers_per_node=2, seed=seed)
+    for i in range(n_tasks):
+        sim.submit(SimTask(i, 2e-3, i % 8), at=(i % 10) * 1e-3)
+    sim.kill_node(3, at=kill_at)
+    sim.run()
+    assert sorted(t.task_id for t in sim.finished) == list(range(n_tasks))
+
+
+# ------------------------------------------------------- data pipeline
+
+@given(step=st.integers(0, 10_000), seed=st.integers(0, 2**16))
+@settings(**SET)
+def test_data_batch_replay_deterministic(step, seed):
+    """Lineage replay demands load_batch(step) be pure."""
+    from repro.data.pipeline import DataConfig, batch_for_step
+    cfg = DataConfig(vocab_size=1000, seq_len=16, global_batch=4, seed=seed)
+    a = batch_for_step(cfg, step)
+    b = batch_for_step(cfg, step)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].min() >= 0 and a["tokens"].max() < 1000
+
+
+@given(shards=st.sampled_from([1, 2, 4, 8]))
+@settings(**SET)
+def test_data_shards_partition_batch(shards):
+    from repro.data.pipeline import DataConfig, batch_for_step
+    full = 16
+    cfgs = [DataConfig(vocab_size=100, seq_len=8, global_batch=full,
+                       num_shards=shards, shard_id=i) for i in range(shards)]
+    sizes = [batch_for_step(c, 0)["tokens"].shape[0] for c in cfgs]
+    assert sum(sizes) == full
