@@ -14,15 +14,10 @@ RESULTS = Path(__file__).resolve().parent / "results"
 
 
 def _costs() -> SimCosts:
-    mb = RESULTS / "microbench.json"
-    if mb.exists():
-        m = json.loads(mb.read_text())
-        return SimCosts(
-            local_sched_s=m["submit"]["p50_us"] * 1e-6,
-            global_sched_s=5 * m["submit"]["p50_us"] * 1e-6,
-            worker_overhead_s=m["get_done"]["p50_us"] * 1e-6,
-            gcs_op_s=m["gcs_put"]["p50_us"] * 1e-6)
-    return SimCosts()
+    # calibrated from the tracked perf record at the repo root (falls back
+    # to the defaults when it is absent)
+    bench = Path(__file__).resolve().parent.parent / "BENCH_core.json"
+    return SimCosts.from_microbench(str(bench))
 
 
 def sweep_nodes(task_ms: float = 5.0, tasks_per_node: int = 400) -> list:

@@ -26,7 +26,6 @@ import time
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.control_plane import TASK_DONE
 from repro.core.runtime import Cluster
 from repro.core.worker import current_node, current_task
 
@@ -135,13 +134,22 @@ def put(value: Any) -> ObjectRef:
 def get(ref, timeout: float = 60.0):
     """Blocking retrieval of a future's value (§3.1 point 4). A worker
     blocking here releases its resources + hands its core to a spare
-    worker, so nested get() cannot deadlock the pool."""
+    worker, so nested get() cannot deadlock the pool. Node-local objects
+    are served with a single store read — no control-plane round trip, no
+    pub-sub churn."""
     cluster = _cluster()
     if isinstance(ref, (list, tuple)):
         return type(ref)(get(r, timeout) for r in ref)
+    from repro.core.object_store import MISSING
+    from repro.core.worker import TaskError
     node = current_node()
-    spec = current_task()
-    if node is not None and not node.store.contains(ref.id):
+    if node is not None:
+        val = node.store.get_if_present(ref.id)
+        if val is not MISSING:
+            if isinstance(val, TaskError):
+                raise val
+            return val
+        spec = current_task()
         node.enter_blocked(spec)
         try:
             val = cluster.fetch(ref.id, prefer_node=node.node_id,
@@ -149,9 +157,7 @@ def get(ref, timeout: float = 60.0):
         finally:
             node.exit_blocked(spec)
     else:
-        val = cluster.fetch(ref.id, prefer_node=None if node is None
-                            else node.node_id, timeout=timeout)
-    from repro.core.worker import TaskError
+        val = cluster.fetch(ref.id, timeout=timeout)
     if isinstance(val, TaskError):
         raise val
     return val
@@ -162,37 +168,49 @@ def wait(refs: Sequence[ObjectRef], num_returns: int = 1,
          ) -> Tuple[List[ObjectRef], List[ObjectRef]]:
     """Block until `num_returns` futures are complete or `timeout` elapses;
     returns (done, pending). Straggler-aware dynamic control flow (§3.1.5).
-    """
+
+    Event-driven: completions push a condition-variable notify through the
+    object-table pub-sub — there is no polling wakeup. Futures already
+    complete on entry are counted with one object-table read each, and if
+    they alone satisfy `num_returns` no subscription is ever created."""
     cluster = _cluster()
     gcs = cluster.gcs
     num_returns = min(num_returns, len(refs))
-    done_set = set()
+    done_set = {r.id for r in refs if gcs.locations(r.id)}
+
+    def partition(snapshot):
+        # partition against a frozen snapshot: a completion callback
+        # landing mid-partition must not leave a ref in neither list
+        done = [r for r in refs if r.id in snapshot]
+        pending = [r for r in refs if r.id not in snapshot]
+        return done, pending
+
+    if len(done_set) >= num_returns or (timeout is not None and timeout <= 0):
+        return partition(set(done_set))
+
     cond = threading.Condition()
-
-    def check(ref):
-        if gcs.locations(ref.id):
-            done_set.add(ref.id)
-
     subs = []
     for ref in refs:
+        if ref.id in done_set:
+            continue
+
         def cb(_k, locs, _rid=ref.id):
             if locs:
                 with cond:
                     done_set.add(_rid)
                     cond.notify_all()
-        gcs.subscribe(f"obj:{ref.id}", cb)
-        subs.append((f"obj:{ref.id}", cb))
+
+        subs.append(gcs.subscribe(f"obj:{ref.id}", cb))
 
     deadline = None if timeout is None else time.perf_counter() + timeout
     with cond:
         while len(done_set) < num_returns:
-            remaining = None if deadline is None else deadline - time.perf_counter()
+            remaining = (None if deadline is None
+                         else deadline - time.perf_counter())
             if remaining is not None and remaining <= 0:
                 break
-            cond.wait(timeout=remaining if remaining is None
-                      else min(remaining, 0.05))
-    for key, cb in subs:
-        gcs.unsubscribe(key, cb)
-    done = [r for r in refs if r.id in done_set]
-    pending = [r for r in refs if r.id not in done_set]
-    return done, pending
+            cond.wait(timeout=remaining)
+        snapshot = set(done_set)
+    for sub in subs:
+        gcs.unsubscribe(sub)
+    return partition(snapshot)

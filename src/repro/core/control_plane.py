@@ -8,18 +8,31 @@ state and can be restarted, exactly as the paper prescribes; recovery
 re-reads this store and replays lineage.
 
 The paper uses sharded Redis; here each shard is a dict + lock + subscriber
-list (no external dependency — same logical design, hash-sharded exact-match
+map (no external dependency — same logical design, hash-sharded exact-match
 keys, pub-sub channels). Shard count is configurable to demonstrate R2
 scaling in the throughput benchmark.
+
+Hot-path design notes (R1/R2, millisecond-latency tasks):
+  * pub-sub is push-on-put — every write notifies subscribers outside the
+    shard lock, so waiters (fetch/wait/dataflow gates) never poll;
+  * `subscribe` returns a `Subscription` handle for O(1) removal (the
+    subscriber map is keyed by token, not scanned);
+  * `put_many` writes a batch of keys acquiring each shard lock at most
+    once — task registration (spec + state + lineage) is one such batch;
+  * the profiling event log is striped per thread (each thread appends to
+    its own buffer with no lock at all), so concurrent workers never
+    serialize on a single global `_events_lock`;
+  * where shard lookup repeats for the same key — the subscribe/
+    unsubscribe pair on every blocked fetch — the resolved shard is
+    cached on the `Subscription` handle, so removal never rehashes.
 """
 from __future__ import annotations
 
 import itertools
 import threading
 import time
-from collections import defaultdict
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
 # ------------------------------------------------------------------ tables
 
@@ -47,7 +60,19 @@ class _Shard:
     def __init__(self):
         self.lock = threading.Lock()
         self.data: Dict[str, Any] = {}
-        self.subs: Dict[str, List[Callable[[str, Any], None]]] = defaultdict(list)
+        # key -> {token: callback}; token-keyed for O(1) unsubscribe
+        self.subs: Dict[str, Dict[int, Callable[[str, Any], None]]] = {}
+
+
+class Subscription:
+    """Handle returned by `subscribe`; pass back to `unsubscribe` for O(1)
+    removal without scanning the subscriber list."""
+    __slots__ = ("key", "token", "_shard")
+
+    def __init__(self, key: str, token: int, shard: _Shard):
+        self.key = key
+        self.token = token
+        self._shard = shard
 
 
 class ControlPlane:
@@ -56,9 +81,14 @@ class ControlPlane:
     def __init__(self, num_shards: int = 8):
         self.num_shards = num_shards
         self._shards = [_Shard() for _ in range(num_shards)]
-        self._events: List[Tuple[float, str, str, str, dict]] = []
-        self._events_lock = threading.Lock()
+        # per-thread event stripes: each thread owns a buffer it appends
+        # to without locking (list.append is atomic under the GIL); the
+        # registry lock only guards stripe creation and enumeration
+        self._event_tls = threading.local()
+        self._event_stripes: List[List[Tuple[float, str, str, str, dict]]] = []
+        self._event_registry_lock = threading.Lock()
         self._counter = itertools.count()
+        self._sub_tokens = itertools.count()
         self.failed = False  # fault-injection: the DB itself
 
     # -------------------------------------------------------------- kv api
@@ -70,8 +100,37 @@ class ControlPlane:
         sh = self._shard(key)
         with sh.lock:
             sh.data[key] = value
-            subs = list(sh.subs.get(key, ()))
-        for cb in subs:
+            subs = sh.subs.get(key)
+            cbs = list(subs.values()) if subs else None
+        if cbs:
+            for cb in cbs:
+                cb(key, value)
+
+    def put_many(self, items: Iterable[Tuple[str, Any]]) -> None:
+        """Write a batch of keys, acquiring each shard's lock at most once
+        (one 'sharded transaction' per shard). Notifications fire after all
+        locks are released, in batch order."""
+        # batches are tiny (task registration is 3-4 keys): a linear scan
+        # over the group list beats dict-based grouping
+        grouped: List[Tuple[_Shard, List[Tuple[str, Any]]]] = []
+        for key, value in items:
+            sh = self._shard(key)
+            for g_sh, g_kvs in grouped:
+                if g_sh is sh:
+                    g_kvs.append((key, value))
+                    break
+            else:
+                grouped.append((sh, [(key, value)]))
+        fired: List[Tuple[Callable, str, Any]] = []
+        for sh, kvs in grouped:
+            with sh.lock:
+                for key, value in kvs:
+                    sh.data[key] = value
+                    subs = sh.subs.get(key)
+                    if subs:
+                        fired.extend((cb, key, value)
+                                     for cb in subs.values())
+        for cb, key, value in fired:
             cb(key, value)
 
     def update(self, key: str, fn: Callable[[Any], Any], default=None) -> Any:
@@ -79,9 +138,11 @@ class ControlPlane:
         with sh.lock:
             new = fn(sh.data.get(key, default))
             sh.data[key] = new
-            subs = list(sh.subs.get(key, ()))
-        for cb in subs:
-            cb(key, new)
+            subs = sh.subs.get(key)
+            cbs = list(subs.values()) if subs else None
+        if cbs:
+            for cb in cbs:
+                cb(key, new)
         return new
 
     def get(self, key: str, default=None) -> Any:
@@ -89,28 +150,41 @@ class ControlPlane:
         with sh.lock:
             return sh.data.get(key, default)
 
-    def subscribe(self, key: str, cb: Callable[[str, Any], None]) -> None:
-        """cb fires on every put to `key`; fires immediately if present."""
+    def subscribe(self, key: str,
+                  cb: Callable[[str, Any], None]) -> Subscription:
+        """cb fires on every put to `key`; fires immediately if present.
+        Returns a Subscription handle for O(1) unsubscribe."""
         sh = self._shard(key)
+        token = next(self._sub_tokens)
         with sh.lock:
-            sh.subs[key].append(cb)
+            sh.subs.setdefault(key, {})[token] = cb
             cur = sh.data.get(key)
         if cur is not None:
             cb(key, cur)
+        return Subscription(key, token, sh)
 
-    def unsubscribe(self, key: str, cb) -> None:
-        sh = self._shard(key)
+    def unsubscribe(self, sub: Subscription) -> None:
+        """O(1) removal via the handle `subscribe` returned; the shard
+        cached on the handle means no rehash on the way out."""
+        sh = sub._shard
         with sh.lock:
-            if cb in sh.subs.get(key, ()):
-                sh.subs[key].remove(cb)
+            entry = sh.subs.get(sub.key)
+            if entry is not None:
+                entry.pop(sub.token, None)
+                if not entry:
+                    del sh.subs[sub.key]
 
     # ----------------------------------------------------------- task table
 
     def register_task(self, spec: TaskSpec) -> None:
-        self.put(f"task:{spec.task_id}", spec)          # lineage record
-        self.put(f"task_state:{spec.task_id}", TASK_PENDING)
-        for rid in spec.return_ids:
-            self.put(f"lineage:{rid}", spec.task_id)
+        """Spec + state + lineage land in one batched sharded write."""
+        items: List[Tuple[str, Any]] = [
+            (f"task:{spec.task_id}", spec),
+            (f"task_state:{spec.task_id}", TASK_PENDING),
+        ]
+        items.extend((f"lineage:{rid}", spec.task_id)
+                     for rid in spec.return_ids)
+        self.put_many(items)
 
     def task_spec(self, task_id: str) -> Optional[TaskSpec]:
         return self.get(f"task:{task_id}")
@@ -134,6 +208,12 @@ class ControlPlane:
     def locations(self, obj_id: str) -> frozenset:
         return self.get(f"obj:{obj_id}") or frozenset()
 
+    def notify_lost(self, obj_id: str) -> None:
+        """Push-based loss notification: rewrite the (possibly empty)
+        location set so blocked fetchers wake and trigger lineage replay,
+        instead of discovering the loss on a polling timer."""
+        self.update(f"obj:{obj_id}", lambda s: s or frozenset())
+
     def producing_task(self, obj_id: str) -> Optional[str]:
         return self.get(f"lineage:{obj_id}")
 
@@ -151,13 +231,22 @@ class ControlPlane:
     # ------------------------------------------------------------ profiling
 
     def log_event(self, kind: str, task_id: str, where: str, **extra) -> None:
-        with self._events_lock:
-            self._events.append((time.perf_counter(), kind, task_id, where,
-                                 extra))
+        stripe = getattr(self._event_tls, "stripe", None)
+        if stripe is None:
+            stripe = []
+            self._event_tls.stripe = stripe
+            with self._event_registry_lock:
+                self._event_stripes.append(stripe)
+        stripe.append((time.perf_counter(), kind, task_id, where, extra))
 
     def events(self) -> List[Tuple[float, str, str, str, dict]]:
-        with self._events_lock:
-            return list(self._events)
+        with self._event_registry_lock:
+            stripes = list(self._event_stripes)
+        merged: List[Tuple[float, str, str, str, dict]] = []
+        for stripe in stripes:
+            merged.extend(stripe)
+        merged.sort(key=lambda e: e[0])
+        return merged
 
     def next_id(self, prefix: str) -> str:
         return f"{prefix}{next(self._counter)}"

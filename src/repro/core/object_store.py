@@ -17,6 +17,17 @@ from typing import Any, Dict, Optional
 from repro.core.control_plane import ControlPlane
 
 
+class _Missing:
+    __slots__ = ()
+
+    def __repr__(self):  # pragma: no cover
+        return "<MISSING>"
+
+
+#: Sentinel returned by `get_if_present` when the object is not resident.
+MISSING = _Missing()
+
+
 class ObjectStore:
     def __init__(self, node_id: int, gcs: ControlPlane,
                  transfer_latency_s: float = 0.0):
@@ -38,6 +49,13 @@ class ObjectStore:
     def get_local(self, obj_id: str) -> Any:
         with self._lock:
             return self._data[obj_id]
+
+    def get_if_present(self, obj_id: str, default: Any = MISSING) -> Any:
+        """Single-lock conditional read — the node-local fast path.
+        Returns `default` when the object is not resident (values may be
+        None, so callers should compare against the MISSING sentinel)."""
+        with self._lock:
+            return self._data.get(obj_id, default)
 
     def fetch_from(self, other: "ObjectStore", obj_id: str) -> Any:
         """Inter-node transfer: copies the value into this store."""

@@ -16,9 +16,19 @@ from typing import Any, Dict, List, Optional
 
 from repro.core.control_plane import (TASK_DONE, TASK_LOST, TASK_PENDING,
                                       TASK_RUNNING, ControlPlane, TaskSpec)
-from repro.core.object_store import ObjectStore
+from repro.core.object_store import MISSING, ObjectStore
 from repro.core.scheduler import GlobalScheduler, LocalScheduler
-from repro.core.worker import Worker
+from repro.core.worker import Worker, execute_task
+
+# Bounds inline work-stealing recursion (a steal can fetch its own lost
+# args, which may steal again); past this depth fetch parks on the event.
+_MAX_STEAL_DEPTH = 16
+# Bounds the per-node run-queue scan a steal probe performs under the
+# queue mutex: with deep backlogs the workers are saturated anyway and an
+# unbounded scan would contend with every dequeue on exactly the path
+# this fast path is meant to shorten.
+_MAX_STEAL_SCAN = 64
+_steal_ctx = threading.local()
 
 
 class Node:
@@ -33,6 +43,7 @@ class Node:
         self.capacity = dict(resources)
         self._avail = dict(resources)
         self._res_lock = threading.Lock()
+        self._res_cond = threading.Condition(self._res_lock)
         self.store = ObjectStore(node_id, cluster.gcs, transfer_latency_s)
         self.run_queue: "queue.Queue[Optional[TaskSpec]]" = queue.Queue()
         self.local_scheduler = LocalScheduler(self, spill_threshold)
@@ -44,23 +55,40 @@ class Node:
     def satisfies(self, req: Dict[str, float]) -> bool:
         return all(self.capacity.get(k, 0.0) >= v for k, v in req.items())
 
+    def _acquire_locked(self, req: Dict[str, float]) -> bool:
+        if all(self._avail.get(k, 0.0) >= v for k, v in req.items()):
+            for k, v in req.items():
+                self._avail[k] -= v
+            return True
+        return False
+
     def try_acquire(self, req: Dict[str, float]) -> bool:
         with self._res_lock:
-            if all(self._avail.get(k, 0.0) >= v for k, v in req.items()):
-                for k, v in req.items():
-                    self._avail[k] -= v
-                return True
-            return False
+            return self._acquire_locked(req)
+
+    def acquire_blocking(self, req: Dict[str, float],
+                         timeout: float) -> bool:
+        """Block until the resources can be acquired — woken by `release`
+        via a condition variable, never by a polling sleep."""
+        deadline = time.perf_counter() + timeout
+        with self._res_cond:
+            while not self._acquire_locked(req):
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0:  # pragma: no cover
+                    return False
+                self._res_cond.wait(remaining)
+        return True
 
     def release(self, req: Dict[str, float]) -> None:
-        with self._res_lock:
+        with self._res_cond:
             for k, v in req.items():
                 self._avail[k] = min(self.capacity.get(k, 0.0),
                                      self._avail.get(k, 0.0) + v)
+            self._res_cond.notify_all()
 
     def load(self) -> float:
         return float(self.run_queue.qsize()
-                     + len(self.local_scheduler._backlog))
+                     + self.local_scheduler.backlog_len())
 
     # --------------------------------------------------- blocked workers
     # A worker blocking in get()/wait() releases its task's resources and
@@ -72,7 +100,7 @@ class Node:
             self.release(spec.resources)
         if (len(self.workers) < self._max_workers
                 and (self.run_queue.qsize() > 0
-                     or self.local_scheduler._backlog)):
+                     or self.local_scheduler.backlog_len() > 0)):
             self.workers.append(Worker(self, len(self.workers)))
         self.local_scheduler.on_worker_free()
 
@@ -80,11 +108,7 @@ class Node:
                      timeout: float = 60.0) -> None:
         if spec is None:
             return
-        deadline = time.perf_counter() + timeout
-        while not self.try_acquire(spec.resources):
-            if time.perf_counter() > deadline:  # pragma: no cover
-                break
-            time.sleep(0.0002)
+        self.acquire_blocking(spec.resources, timeout)
 
     # ------------------------------------------------------------- dataflow
 
@@ -95,6 +119,11 @@ class Node:
         from repro.core.api import ObjectRef
         if not isinstance(arg, ObjectRef):
             return arg
+        # node-local fast path: a single store read, no control-plane
+        # round trip and no pub-sub churn
+        val = self.store.get_if_present(arg.id)
+        if val is not MISSING:
+            return val
         return self.cluster.fetch(arg.id, prefer_node=self.node_id)
 
     def shutdown(self) -> None:
@@ -144,43 +173,117 @@ class Cluster:
     def fetch(self, obj_id: str, prefer_node: Optional[int] = None,
               timeout: float = 30.0) -> Any:
         """Return the value of obj_id, transferring/reconstructing as
-        needed. Blocks until available — event-driven via a pub-sub
-        subscription on the object table (no polling on the hot path;
-        lineage-replay checks run on 50ms wakeups only)."""
+        needed. Purely event-driven: the available case is served with at
+        most one object-table read (and zero pub-sub churn); the blocked
+        case parks on an Event that every object-table write for this key
+        sets — including the push-based loss notifications a dying node's
+        tasks emit — so there is no polling wakeup anywhere.
+
+        `timeout` bounds the time spent *waiting*: when the producing
+        task is stolen and run inline (work-stealing fast path), the
+        getter has become the worker and the task runs to completion even
+        if that exceeds the timeout — the standard inline-join semantics
+        of work-stealing futures."""
+        # fast path: object resident on the preferred (local) node —
+        # a single store read, no control-plane round trip
+        if prefer_node is not None and self.nodes[prefer_node].alive:
+            val = self.nodes[prefer_node].store.get_if_present(obj_id)
+            if val is not MISSING:
+                return val
+        val = self._try_fetch(obj_id, prefer_node)
+        if val is not MISSING:
+            return val
+        # zero-round-trip fast path: if the producing task is still queued
+        # on some live node, steal it and run it inline on this thread —
+        # no subscription, no wakeup handoff at all
+        if self._try_steal_execute(obj_id):
+            val = self._try_fetch(obj_id, prefer_node)
+            if val is not MISSING:
+                return val
+        # slow path: subscribe, then re-check so nothing lands in the gap
         deadline = time.perf_counter() + timeout
         ev = threading.Event()
-
-        def _on_loc(_k, locs):
-            if locs:
-                ev.set()
-
-        self.gcs.subscribe(f"obj:{obj_id}", _on_loc)
+        sub = self.gcs.subscribe(f"obj:{obj_id}",
+                                 lambda _k, _locs: ev.set())
         try:
             while True:
-                locs = self.gcs.locations(obj_id)
-                live = [n for n in locs
-                        if n < len(self.nodes) and self.nodes[n].alive]
-                if live:
-                    if prefer_node in live:
-                        return self.nodes[prefer_node].store.get_local(obj_id)
-                    src = self.nodes[live[0]]
-                    if (prefer_node is not None
-                            and self.nodes[prefer_node].alive):
-                        self.gcs.log_event("transfer", obj_id,
-                                           f"node{live[0]}->node{prefer_node}")
-                        return self.nodes[prefer_node].store.fetch_from(
-                            src.store, obj_id)
-                    return src.store.get_local(obj_id)
-                # object lost or not yet produced: trigger lineage replay if
-                # its producing task already finished (R6)
+                ev.clear()
+                val = self._try_fetch(obj_id, prefer_node)
+                if val is not MISSING:
+                    return val
+                if self._try_steal_execute(obj_id):
+                    continue  # produced inline; re-check immediately
+                # object lost or not yet produced: trigger lineage replay
+                # if its producing task already finished (R6)
                 self.maybe_reconstruct(obj_id)
                 remaining = deadline - time.perf_counter()
                 if remaining <= 0:
                     raise TimeoutError(f"fetch({obj_id}) timed out")
-                ev.clear()
-                ev.wait(timeout=min(remaining, 0.05))
+                ev.wait(timeout=remaining)
         finally:
-            self.gcs.unsubscribe(f"obj:{obj_id}", _on_loc)
+            self.gcs.unsubscribe(sub)
+
+    def _try_steal_execute(self, obj_id: str) -> bool:
+        """Work-stealing get: if obj_id's producing task is PENDING in a
+        live node's run queue (resources already granted by that node's
+        local scheduler), pull it and execute it inline on the calling
+        thread under that node's identity. Returns True if a task ran."""
+        depth = getattr(_steal_ctx, "depth", 0)
+        if depth >= _MAX_STEAL_DEPTH:
+            return False
+        task_id = self.gcs.producing_task(obj_id)
+        if task_id is None:
+            return False
+        if self.gcs.task_state(task_id) != TASK_PENDING:
+            return False
+        for node in self.nodes:
+            if not node.alive:
+                continue
+            q = node.run_queue
+            spec = None
+            with q.mutex:
+                for i, s in enumerate(q.queue):
+                    if i >= _MAX_STEAL_SCAN:
+                        break
+                    if s is not None and s.task_id == task_id:
+                        spec = s
+                        break
+                if spec is not None:
+                    q.queue.remove(spec)
+            if spec is None:
+                continue
+            self.gcs.log_event("steal", task_id, f"node{node.node_id}")
+            _steal_ctx.depth = depth + 1
+            try:
+                execute_task(node, spec, "steal")
+            finally:
+                _steal_ctx.depth = depth
+            return True
+        return False
+
+    def _try_fetch(self, obj_id: str, prefer_node: Optional[int]) -> Any:
+        """One attempt to serve obj_id from some live replica; returns the
+        MISSING sentinel when no live copy exists. A replica vanishing
+        between the location read and the store read (node killed/wiped
+        concurrently) is reported as a miss so the caller's retry loop
+        handles it, never as a KeyError."""
+        locs = self.gcs.locations(obj_id)
+        live = [n for n in locs
+                if n < len(self.nodes) and self.nodes[n].alive]
+        if not live:
+            return MISSING
+        try:
+            if prefer_node in live:
+                return self.nodes[prefer_node].store.get_if_present(obj_id)
+            src = self.nodes[live[0]]
+            if prefer_node is not None and self.nodes[prefer_node].alive:
+                self.gcs.log_event("transfer", obj_id,
+                                   f"node{live[0]}->node{prefer_node}")
+                return self.nodes[prefer_node].store.fetch_from(
+                    src.store, obj_id)
+            return src.store.get_if_present(obj_id)
+        except KeyError:  # replica wiped mid-transfer
+            return MISSING
 
     # ---------------------------------------------------- fault tolerance
 
@@ -220,9 +323,16 @@ class Cluster:
     def resubmit(self, spec: TaskSpec) -> None:
         # lost args must be reconstructed before the dataflow gate sees them
         from repro.core.api import ObjectRef
+        dead = frozenset(n for n, node in enumerate(self.nodes)
+                         if not node.alive)
         for a in list(spec.args) + list(spec.kwargs.values()):
             if isinstance(a, ObjectRef) and not self._live_locs(a.id):
-                self.gcs.update(f"obj:{a.id}", lambda s: frozenset())
+                # subtract only dead nodes' locations: a concurrent
+                # producer may have registered a fresh live copy between
+                # the check above and this update, and clobbering the set
+                # to empty would orphan it
+                self.gcs.update(f"obj:{a.id}",
+                                lambda s: (s or frozenset()) - dead)
                 self.maybe_reconstruct(a.id)
         target = (self.nodes[spec.submitter_node]
                   if spec.submitter_node < len(self.nodes)

@@ -26,10 +26,18 @@ if TYPE_CHECKING:  # pragma: no cover
     from repro.core.runtime import Cluster, Node
 
 
+_ObjectRef = None
+
+
 def _ref_ids(spec: TaskSpec) -> List[str]:
-    from repro.core.api import ObjectRef
-    ids = [a.id for a in spec.args if isinstance(a, ObjectRef)]
-    ids += [v.id for v in spec.kwargs.values() if isinstance(v, ObjectRef)]
+    if not spec.args and not spec.kwargs:
+        return []
+    global _ObjectRef
+    if _ObjectRef is None:  # lazy: scheduler<->api import cycle
+        from repro.core.api import ObjectRef
+        _ObjectRef = ObjectRef
+    ids = [a.id for a in spec.args if isinstance(a, _ObjectRef)]
+    ids += [v.id for v in spec.kwargs.values() if isinstance(v, _ObjectRef)]
     return ids
 
 
@@ -44,9 +52,12 @@ class LocalScheduler:
     # ------------------------------------------------------------- submit
 
     def submit(self, spec: TaskSpec, force_local: bool = False) -> None:
-        """Entry point for locally-created work (and global placements)."""
+        """Entry point for locally-created work (and global placements).
+        Dependencies already resident in this node's store are recognized
+        with a single local read — no object-table lookup."""
+        store = self.node.store
         missing = [oid for oid in _ref_ids(spec)
-                   if not self.gcs.locations(oid)]
+                   if not (store.contains(oid) or self.gcs.locations(oid))]
         if missing:
             self._defer_until_ready(spec, missing, force_local)
             return
@@ -54,22 +65,38 @@ class LocalScheduler:
 
     def _defer_until_ready(self, spec: TaskSpec, missing: List[str],
                            force_local: bool) -> None:
-        remaining = {"n": len(missing)}
+        """Dataflow gate: park the task on pub-sub subscriptions for its
+        missing arguments; the write that lands the last one schedules the
+        task (push-driven, no polling). Each argument is counted at most
+        once even if its object table entry is rewritten (transfers,
+        loss notifications)."""
+        state = {"pending": set(missing), "done": False}
+        subs: List = []
         lock = threading.Lock()
 
-        def on_ready(_key, locs):
+        def on_ready(key, locs):
             if not locs:
                 return
             with lock:
-                remaining["n"] -= 1
-                if remaining["n"] != 0:
+                state["pending"].discard(key[4:])  # strip "obj:"
+                if state["pending"] or state["done"]:
                     return
-            for oid in missing:
-                self.gcs.unsubscribe(f"obj:{oid}", on_ready)
+                state["done"] = True
+                held = list(subs)
+            for s in held:
+                self.gcs.unsubscribe(s)
             self._schedule_ready(spec, force_local)
 
         for oid in missing:
-            self.gcs.subscribe(f"obj:{oid}", on_ready)
+            sub = self.gcs.subscribe(f"obj:{oid}", on_ready)
+            with lock:
+                if state["done"]:
+                    # the gate fired during this subscribe call (the
+                    # object was already present); drop the handle that
+                    # the unsubscribe sweep could not have seen yet
+                    self.gcs.unsubscribe(sub)
+                    return
+                subs.append(sub)
 
     def _schedule_ready(self, spec: TaskSpec, force_local: bool) -> None:
         node = self.node
@@ -112,6 +139,12 @@ class LocalScheduler:
         with self._lock:
             items, self._backlog = self._backlog, []
         return items
+
+    def backlog_len(self) -> int:
+        """Locked backlog-depth accessor (used for load accounting; never
+        read `_backlog` without the lock)."""
+        with self._lock:
+            return len(self._backlog)
 
 
 class GlobalScheduler:

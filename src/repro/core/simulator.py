@@ -28,6 +28,45 @@ class SimCosts:
     worker_overhead_s: float = 15e-6 # dequeue/arg-resolve/result-store
     gcs_op_s: float = 3e-6           # control-plane write
 
+    @classmethod
+    def from_microbench(cls, path: str = "BENCH_core.json",
+                        run: Optional[str] = None) -> "SimCosts":
+        """Calibrate the cost model from measured runtime latencies
+        (benchmarks/microbench.py writes BENCH_core.json at the repo
+        root). Mapping: submit p50 -> local scheduling cost; gcs_put p50
+        -> control-plane op; e2e_local p50 minus submit and get costs ->
+        worker overhead; global scheduling is modeled as a local decision
+        plus two extra control-plane hops. Falls back to the defaults
+        when the file or run is absent."""
+        import json
+        import pathlib
+        p = pathlib.Path(path)
+        if not p.exists():
+            return cls()
+        try:
+            doc = json.loads(p.read_text())
+        except (OSError, json.JSONDecodeError):  # pragma: no cover
+            return cls()
+        runs = doc.get("runs", {})
+        data = runs.get(run) if run else None
+        if data is None:
+            data = runs.get("pr1") or runs.get("seed")
+        if not data:
+            return cls()
+        try:
+            us = 1e-6
+            submit = data["submit"]["p50_us"] * us
+            gcs_op = data["gcs_put"]["p50_us"] * us
+            get_done = data["get_done"]["p50_us"] * us
+            e2e = data["e2e_local"]["p50_us"] * us
+        except (KeyError, TypeError):  # pragma: no cover
+            return cls()
+        worker = max(e2e - submit - get_done, 1e-6)
+        return cls(local_sched_s=max(submit, 1e-7),
+                   global_sched_s=max(submit + 2 * gcs_op, 2e-7),
+                   worker_overhead_s=worker,
+                   gcs_op_s=max(gcs_op, 1e-8))
+
 
 @dataclass
 class SimTask:

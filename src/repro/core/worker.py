@@ -35,6 +35,56 @@ class TaskError(Exception):
     pass
 
 
+def execute_task(node: "Node", spec: TaskSpec, who: str) -> None:
+    """Run one dispatched task to completion on the calling thread —
+    shared by worker threads and the work-stealing get() fast path. The
+    caller must own the task's resource grant (the local scheduler
+    acquired it before enqueue); this function releases it. The worker
+    context is saved/restored so a thief thread keeps its own identity
+    afterwards."""
+    gcs = node.gcs
+    prev_node = getattr(_worker_ctx, "node", None)
+    prev_spec = getattr(_worker_ctx, "spec", None)
+    _worker_ctx.node = node
+    _worker_ctx.spec = spec
+    try:
+        gcs.set_task_state(spec.task_id, TASK_RUNNING)
+        gcs.log_event("start", spec.task_id,
+                      f"node{node.node_id}/{who}")
+        fn = gcs.function(spec.func_name)
+        args = [node.resolve(a) for a in spec.args]
+        kwargs = {k: node.resolve(v) for k, v in spec.kwargs.items()}
+        out = fn(*args, **kwargs)
+        if node.alive:  # a dead node's results are discarded
+            rets = (out,) if len(spec.return_ids) == 1 else tuple(out)
+            for rid, val in zip(spec.return_ids, rets):
+                node.store.put(rid, val)
+            gcs.set_task_state(spec.task_id, TASK_DONE)
+            gcs.log_event("finish", spec.task_id,
+                          f"node{node.node_id}/{who}")
+        else:
+            gcs.set_task_state(spec.task_id, TASK_LOST)
+            # push-based loss notification: wake any fetcher blocked on
+            # these outputs so it can trigger lineage replay immediately
+            # (no polling fallback exists)
+            for rid in spec.return_ids:
+                gcs.notify_lost(rid)
+    except Exception:  # noqa: BLE001
+        err = TaskError(
+            f"task {spec.task_id} ({spec.func_name}) failed:\n"
+            + traceback.format_exc())
+        for rid in spec.return_ids:
+            node.store.put(rid, err)
+        gcs.set_task_state(spec.task_id, TASK_DONE)
+        gcs.log_event("error", spec.task_id,
+                      f"node{node.node_id}/{who}")
+    finally:
+        _worker_ctx.node = prev_node
+        _worker_ctx.spec = prev_spec
+        node.release(spec.resources)
+        node.local_scheduler.on_worker_free()
+
+
 class Worker(threading.Thread):
     """Pulls from the node's shared run queue (resources were acquired by
     the local scheduler before enqueue)."""
@@ -47,45 +97,11 @@ class Worker(threading.Thread):
         self.start()
 
     def run(self) -> None:
-        _worker_ctx.node = self.node
-        gcs = self.node.gcs
         while True:
             spec = self.node.run_queue.get()
             if spec is None:
                 return
-            node = self.node
-            _worker_ctx.spec = spec
-            try:
-                gcs.set_task_state(spec.task_id, TASK_RUNNING)
-                gcs.put(f"task_node:{spec.task_id}", node.node_id)
-                gcs.log_event("start", spec.task_id,
-                              f"node{node.node_id}/w{self.worker_id}")
-                fn = gcs.function(spec.func_name)
-                args = [node.resolve(a) for a in spec.args]
-                kwargs = {k: node.resolve(v) for k, v in spec.kwargs.items()}
-                out = fn(*args, **kwargs)
-                if node.alive:  # a dead node's results are discarded
-                    rets = (out,) if len(spec.return_ids) == 1 else tuple(out)
-                    for rid, val in zip(spec.return_ids, rets):
-                        node.store.put(rid, val)
-                    gcs.set_task_state(spec.task_id, TASK_DONE)
-                    gcs.log_event("finish", spec.task_id,
-                                  f"node{node.node_id}/w{self.worker_id}")
-                else:
-                    gcs.set_task_state(spec.task_id, TASK_LOST)
-            except Exception:  # noqa: BLE001
-                err = TaskError(
-                    f"task {spec.task_id} ({spec.func_name}) failed:\n"
-                    + traceback.format_exc())
-                for rid in spec.return_ids:
-                    node.store.put(rid, err)
-                gcs.set_task_state(spec.task_id, TASK_DONE)
-                gcs.log_event("error", spec.task_id,
-                              f"node{node.node_id}/w{self.worker_id}")
-            finally:
-                _worker_ctx.spec = None
-                node.release(spec.resources)
-                node.local_scheduler.on_worker_free()
+            execute_task(self.node, spec, f"w{self.worker_id}")
 
     def shutdown(self) -> None:
         self.node.run_queue.put(None)
