@@ -10,7 +10,7 @@ Results land in two places:
   * ``benchmarks/results/microbench.json`` — this run only (feeds the DES
     simulator's cost model via ``SimCosts.from_microbench``);
   * ``BENCH_core.json`` at the repo root — the tracked perf trajectory.
-    Each invocation upserts its ``--run-name`` entry (default ``pr1``) and
+    Each invocation upserts its ``--run-name`` entry (default ``pr2``) and
     preserves the other entries (notably ``seed``, the pre-PR1 baseline),
     then recomputes speedups vs the seed. Regenerate with:
 
@@ -22,7 +22,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import statistics
+import sys
 import time
 from pathlib import Path
 
@@ -169,6 +171,37 @@ def update_bench_file(measurements: dict, run_name: str = "pr1",
     return doc
 
 
+def check_regression(measurements: dict, ref_run: str,
+                     path: Path = BENCH_FILE,
+                     keys=("e2e_remote", "wait_one"),
+                     slack: float = None) -> bool:
+    """CI guard: the hop-free remote path and the wait notify path must
+    not regress vs the committed BENCH_core.json record. The slack factor
+    absorbs CI-machine jitter (override via BENCH_REGRESSION_SLACK)."""
+    if slack is None:
+        slack = float(os.environ.get("BENCH_REGRESSION_SLACK", "3.0"))
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError):
+        print(f"bench-check: cannot read {path}; skipping")
+        return True
+    ref = doc.get("runs", {}).get(ref_run)
+    if ref is None:
+        print(f"bench-check: no run {ref_run!r} in {path}; skipping")
+        return True
+    ok = True
+    for key in keys:
+        cur = measurements[key]["p50_us"]
+        committed = ref[key]["p50_us"]
+        limit = committed * slack
+        good = cur <= limit
+        print(f"bench-check {key}: p50 {cur:.1f}us vs committed "
+              f"{committed:.1f}us (limit {limit:.1f}us) "
+              f"{'ok' if good else 'REGRESSION'}")
+        ok = ok and good
+    return ok
+
+
 def rows():
     # read-only with respect to BENCH_core.json: the tracked perf record
     # is updated only by an explicit `python benchmarks/microbench.py`
@@ -196,21 +229,33 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="quick CI run: small n, does not touch "
                          "BENCH_core.json")
-    ap.add_argument("--run-name", default="pr1",
+    ap.add_argument("--run-name", default="pr2",
                     help="entry name in BENCH_core.json")
     ap.add_argument("--out", default=None,
                     help="override BENCH_core.json path")
+    ap.add_argument("--check-against", default=None, metavar="RUN",
+                    help="compare this run's e2e_remote/wait_one p50 "
+                         "against the committed BENCH_core.json entry "
+                         "RUN and exit 1 on regression (slack factor "
+                         "from BENCH_REGRESSION_SLACK, default 3.0)")
     args = ap.parse_args()
     n = 200 if args.smoke else args.n
+    bench_path = Path(args.out) if args.out else BENCH_FILE
     out = run(n)
     RESULTS.mkdir(exist_ok=True)
     (RESULTS / "microbench.json").write_text(json.dumps(out, indent=1))
+    # check against the *committed* reference before any upsert below
+    # can overwrite it (e.g. --check-against pr2 with --run-name pr2)
+    regressed = (args.check_against
+                 and not check_regression(out, args.check_against,
+                                          path=bench_path))
     if args.smoke and args.out is None:
         print(json.dumps(out, indent=1))
-        return
-    doc = update_bench_file(out, run_name=args.run_name,
-                            path=Path(args.out) if args.out else BENCH_FILE)
-    print(json.dumps(doc, indent=1))
+    else:
+        doc = update_bench_file(out, run_name=args.run_name, path=bench_path)
+        print(json.dumps(doc, indent=1))
+    if regressed:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

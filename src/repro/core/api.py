@@ -21,7 +21,6 @@ Usage:
 from __future__ import annotations
 
 import functools
-import threading
 import time
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -86,9 +85,13 @@ class RemoteFunction:
         """Non-blocking task creation; returns future(s) immediately."""
         cluster = _cluster()
         gcs = cluster.gcs
-        if self._registered_on is not id(cluster):
+        # register once per cluster, keyed by the cluster's monotonic
+        # epoch token (an `is id(cluster)` check compared a fresh int by
+        # identity — always true, re-registering on every submit — and
+        # id() reuse after teardown could falsely skip registration)
+        if self._registered_on != cluster.epoch:
             gcs.register_function(self.name, self._fn)
-            self._registered_on = id(cluster)
+            self._registered_on = cluster.epoch
         task_id = gcs.next_id("t")
         ret_ids = tuple(f"{task_id}.r{i}" for i in range(self.num_returns))
         node = current_node()
@@ -139,7 +142,11 @@ def get(ref, timeout: float = 60.0):
     pub-sub churn."""
     cluster = _cluster()
     if isinstance(ref, (list, tuple)):
-        return type(ref)(get(r, timeout) for r in ref)
+        # one shared deadline across the whole batch — not a fresh full
+        # timeout per element (which made the worst case N x timeout)
+        deadline = time.perf_counter() + timeout
+        return type(ref)(
+            get(r, max(0.0, deadline - time.perf_counter())) for r in ref)
     from repro.core.object_store import MISSING
     from repro.core.worker import TaskError
     node = current_node()
@@ -169,18 +176,24 @@ def wait(refs: Sequence[ObjectRef], num_returns: int = 1,
     """Block until `num_returns` futures are complete or `timeout` elapses;
     returns (done, pending). Straggler-aware dynamic control flow (§3.1.5).
 
-    Event-driven: completions push a condition-variable notify through the
-    object-table pub-sub — there is no polling wakeup. Futures already
-    complete on entry are counted with one object-table read each, and if
-    they alone satisfy `num_returns` no subscription is ever created."""
+    Event-driven via the control plane's completion-notify channel: each
+    completion wakes this call with one targeted notify — no per-ref
+    callback closures, no object-shard subscriber churn, no broadcast
+    notify_all. Futures already complete on entry are counted with one
+    object-table read each, and if they alone satisfy `num_returns` no
+    waiter is ever registered. `num_returns` counts *unique* futures, so
+    duplicate refs in the input cannot make the call unreachable; the
+    returned partition stays aligned with the input list (a duplicated
+    done ref appears twice in `done`)."""
     cluster = _cluster()
     gcs = cluster.gcs
-    num_returns = min(num_returns, len(refs))
-    done_set = {r.id for r in refs if gcs.locations(r.id)}
+    unique_ids = {r.id for r in refs}
+    num_returns = min(num_returns, len(unique_ids))
+    done_set = {i for i in unique_ids if gcs.locations(i)}
 
     def partition(snapshot):
-        # partition against a frozen snapshot: a completion callback
-        # landing mid-partition must not leave a ref in neither list
+        # partition against a frozen snapshot: a completion landing
+        # mid-partition must not leave a ref in neither list
         done = [r for r in refs if r.id in snapshot]
         pending = [r for r in refs if r.id not in snapshot]
         return done, pending
@@ -188,29 +201,25 @@ def wait(refs: Sequence[ObjectRef], num_returns: int = 1,
     if len(done_set) >= num_returns or (timeout is not None and timeout <= 0):
         return partition(set(done_set))
 
-    cond = threading.Condition()
-    subs = []
-    for ref in refs:
-        if ref.id in done_set:
-            continue
-
-        def cb(_k, locs, _rid=ref.id):
-            if locs:
-                with cond:
-                    done_set.add(_rid)
-                    cond.notify_all()
-
-        subs.append(gcs.subscribe(f"obj:{ref.id}", cb))
-
-    deadline = None if timeout is None else time.perf_counter() + timeout
-    with cond:
-        while len(done_set) < num_returns:
-            remaining = (None if deadline is None
-                         else deadline - time.perf_counter())
-            if remaining is not None and remaining <= 0:
-                break
-            cond.wait(timeout=remaining)
-        snapshot = set(done_set)
-    for sub in subs:
-        gcs.unsubscribe(sub)
+    from repro.core.control_plane import CompletionWaiter
+    pending_ids = [i for i in unique_ids if i not in done_set]
+    waiter = CompletionWaiter()
+    gcs.add_waiters(waiter, pending_ids)
+    try:
+        # re-check after registering: a completion that landed in the gap
+        # fired no notify, so fold it in by hand
+        for oid in pending_ids:
+            if gcs.locations(oid):
+                waiter.complete(oid)
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        with waiter.cond:
+            while len(done_set) + len(waiter.done) < num_returns:
+                remaining = (None if deadline is None
+                             else deadline - time.perf_counter())
+                if remaining is not None and remaining <= 0:
+                    break
+                waiter.cond.wait(timeout=remaining)
+            snapshot = done_set | waiter.done
+    finally:
+        gcs.remove_waiters(waiter, pending_ids)
     return partition(snapshot)

@@ -24,7 +24,12 @@ Hot-path design notes (R1/R2, millisecond-latency tasks):
     serialize on a single global `_events_lock`;
   * where shard lookup repeats for the same key — the subscribe/
     unsubscribe pair on every blocked fetch — the resolved shard is
-    cached on the `Subscription` handle, so removal never rehashes.
+    cached on the `Subscription` handle, so removal never rehashes;
+  * `wait()` completions ride a dedicated completion-notify channel
+    (`add_waiters`/`notify_completion`) instead of the generic object
+    pub-sub: one targeted `notify()` per completion wakes exactly the
+    blocked waiter thread, with no per-ref callback closures and no
+    subscriber-map churn on the object shards.
 """
 from __future__ import annotations
 
@@ -75,12 +80,33 @@ class Subscription:
         self._shard = shard
 
 
+class CompletionWaiter:
+    """One blocked `wait()` call on the completion-notify channel: a
+    single condition variable plus the set of object ids whose completion
+    notifies have landed. `complete` issues one targeted `notify()` —
+    exactly one thread ever waits on this condition."""
+    __slots__ = ("cond", "done")
+
+    def __init__(self):
+        self.cond = threading.Condition()
+        self.done: set = set()
+
+    def complete(self, obj_id: str) -> None:
+        with self.cond:
+            self.done.add(obj_id)
+            self.cond.notify()
+
+
 class ControlPlane:
     """Sharded KV + pub-sub. Keys are hashed strings (exact-match only)."""
 
     def __init__(self, num_shards: int = 8):
         self.num_shards = num_shards
         self._shards = [_Shard() for _ in range(num_shards)]
+        # completion-notify channel: striped obj_id -> [CompletionWaiter]
+        self._wait_locks = [threading.Lock() for _ in range(num_shards)]
+        self._wait_maps: List[Dict[str, List[CompletionWaiter]]] = [
+            {} for _ in range(num_shards)]
         # per-thread event stripes: each thread owns a buffer it appends
         # to without locking (list.append is atomic under the GIL); the
         # registry lock only guards stripe creation and enumeration
@@ -200,6 +226,7 @@ class ControlPlane:
     def add_location(self, obj_id: str, node: int) -> None:
         self.update(f"obj:{obj_id}",
                     lambda s: (s or frozenset()) | {node})
+        self.notify_completion(obj_id)
 
     def remove_locations(self, obj_id: str, nodes) -> None:
         self.update(f"obj:{obj_id}",
@@ -216,6 +243,51 @@ class ControlPlane:
 
     def producing_task(self, obj_id: str) -> Optional[str]:
         return self.get(f"lineage:{obj_id}")
+
+    # ------------------------------------------ completion-notify channel
+
+    def _wait_stripe(self, obj_id: str) -> int:
+        return hash(obj_id) % self.num_shards
+
+    def add_waiters(self, waiter: CompletionWaiter,
+                    obj_ids: Iterable[str]) -> None:
+        """Register one waiter for several object completions. Callers
+        must re-check availability after registering: a completion that
+        raced the registration fires no notify (the fast-path guard in
+        `notify_completion` reads the stripe map without the lock)."""
+        for oid in obj_ids:
+            i = self._wait_stripe(oid)
+            with self._wait_locks[i]:
+                self._wait_maps[i].setdefault(oid, []).append(waiter)
+
+    def remove_waiters(self, waiter: CompletionWaiter,
+                       obj_ids: Iterable[str]) -> None:
+        for oid in obj_ids:
+            i = self._wait_stripe(oid)
+            with self._wait_locks[i]:
+                ws = self._wait_maps[i].get(oid)
+                if ws is not None:
+                    try:
+                        ws.remove(waiter)
+                    except ValueError:
+                        pass
+                    if not ws:
+                        del self._wait_maps[i][oid]
+
+    def notify_completion(self, obj_id: str) -> None:
+        """One targeted wake per registered waiter — fired on every
+        location add. The unlocked emptiness probe keeps the no-waiter
+        hot path (every task-output put) at a dict read."""
+        i = self._wait_stripe(obj_id)
+        if not self._wait_maps[i]:
+            return
+        with self._wait_locks[i]:
+            ws = self._wait_maps[i].get(obj_id)
+            if not ws:
+                return
+            ws = list(ws)
+        for w in ws:
+            w.complete(obj_id)
 
     # ------------------------------------------------------- function table
 

@@ -65,6 +65,26 @@ class ObjectStore:
         self.put(obj_id, value)
         return value
 
+    def prefetch_from(self, other: "ObjectStore", obj_id: str) -> bool:
+        """Best-effort transfer for eager argument push at placement
+        time: like `fetch_from` but returns False instead of raising when
+        the source replica vanished (the worker's resolve() falls back to
+        a normal fetch in that case)."""
+        try:
+            self.fetch_from(other, obj_id)
+            return True
+        except KeyError:
+            return False
+
+    def discard(self, obj_id: str) -> None:
+        """Drop one object and deregister its location (used to undo a
+        transfer that raced a node kill — a wiped store must stay
+        empty)."""
+        with self._lock:
+            present = self._data.pop(obj_id, MISSING) is not MISSING
+        if present:
+            self.gcs.remove_locations(obj_id, [self.node_id])
+
     def wipe(self) -> int:
         """Simulate node loss: drop everything, deregister locations."""
         with self._lock:

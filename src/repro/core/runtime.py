@@ -9,6 +9,7 @@ table, and pending/running tasks on the dead node are resubmitted.
 """
 from __future__ import annotations
 
+import itertools
 import queue
 import threading
 import time
@@ -17,7 +18,7 @@ from typing import Any, Dict, List, Optional
 from repro.core.control_plane import (TASK_DONE, TASK_LOST, TASK_PENDING,
                                       TASK_RUNNING, ControlPlane, TaskSpec)
 from repro.core.object_store import MISSING, ObjectStore
-from repro.core.scheduler import GlobalScheduler, LocalScheduler
+from repro.core.scheduler import GlobalScheduler, LocalScheduler, _ref_ids
 from repro.core.worker import Worker, execute_task
 
 # Bounds inline work-stealing recursion (a steal can fetch its own lost
@@ -115,6 +116,46 @@ class Node:
     def dispatch(self, spec: TaskSpec) -> None:
         self.run_queue.put(spec)
 
+    def prefetch_args(self, spec: TaskSpec) -> None:
+        """Eager argument push for cross-node placement: pull the task's
+        ObjectRef arguments into this node's store at dispatch time so
+        the worker's resolve() hits the single-read local fast path
+        instead of paying a fetch round trip per argument. Best-effort —
+        a replica vanishing mid-transfer just leaves the normal fetch
+        path to reconstruct it. With a modeled transfer latency the push
+        runs on a background thread so the (now synchronous) placement
+        path cannot block task submission (R3); resolve() racing the
+        push simply falls back to a normal fetch."""
+        if self.store.transfer_latency_s:
+            threading.Thread(target=self._prefetch_now, args=(spec,),
+                             daemon=True,
+                             name=f"prefetch-n{self.node_id}").start()
+        else:
+            self._prefetch_now(spec)
+
+    def _prefetch_now(self, spec: TaskSpec) -> None:
+        for oid in _ref_ids(spec):
+            if not self.alive:
+                return
+            if self.store.contains(oid):
+                continue
+            for n in self.gcs.locations(oid):
+                if (n == self.node_id or n >= len(self.cluster.nodes)
+                        or not self.cluster.nodes[n].alive):
+                    continue
+                src = self.cluster.nodes[n]
+                if self.store.prefetch_from(src.store, oid):
+                    if not self.alive:
+                        # raced a kill: the wipe may have run before our
+                        # put landed, and a wiped store must stay empty —
+                        # a stale location here would block lineage
+                        # replay after a restart
+                        self.store.discard(oid)
+                        return
+                    self.gcs.log_event(
+                        "prefetch", oid, f"node{n}->node{self.node_id}")
+                    break
+
     def resolve(self, arg: Any) -> Any:
         from repro.core.api import ObjectRef
         if not isinstance(arg, ObjectRef):
@@ -131,12 +172,20 @@ class Node:
             w.shutdown()
 
 
+_cluster_epochs = itertools.count(1)
+
+
 class Cluster:
     def __init__(self, num_nodes: int = 2, workers_per_node: int = 2,
                  resources_per_node: Optional[Dict[str, float]] = None,
                  gcs_shards: int = 8, num_global_schedulers: int = 1,
                  spill_threshold: int = 4, transfer_latency_s: float = 0.0):
+        # monotonic process-wide token: never reused across clusters (an
+        # id() would be, after teardown), so per-cluster registration
+        # guards compare against this
+        self.epoch = next(_cluster_epochs)
         self.gcs = ControlPlane(gcs_shards)
+        # num_global_schedulers now counts placement shards, not threads
         self.global_scheduler = GlobalScheduler(self, num_global_schedulers)
         self._unschedulable: List[TaskSpec] = []
         self._unsched_lock = threading.Lock()
@@ -340,13 +389,9 @@ class Cluster:
                   else self.live_nodes()[0])
         target.local_scheduler.submit(spec)
 
-    def kill_node(self, node_id: int) -> None:
-        """Fail-stop a node: discard its objects and requeue its tasks."""
-        node = self.nodes[node_id]
-        node.alive = False
-        self.gcs.log_event("node_failure", f"node{node_id}", "cluster")
-        lost = node.store.wipe()
-        # requeue tasks that were queued on the dead node
+    def _drain_dead_node(self, node: Node) -> List[TaskSpec]:
+        """Collect the tasks queued on a fail-stopped node (scheduler
+        backlog + run queue) for resubmission."""
         requeue = node.local_scheduler.drain()
         while True:
             try:
@@ -355,18 +400,48 @@ class Cluster:
                 break
             if spec is not None:
                 requeue.append(spec)
-        for spec in requeue:
+        return requeue
+
+    def _resubmit_drained(self, specs: List[TaskSpec]) -> None:
+        for spec in specs:
             self.gcs.set_task_state(spec.task_id, TASK_PENDING)
             self.resubmit(spec)
+
+    def kill_node(self, node_id: int) -> None:
+        """Fail-stop a node: discard its objects and requeue its tasks."""
+        node = self.nodes[node_id]
+        node.alive = False
+        self.gcs.log_event("node_failure", f"node{node_id}", "cluster")
+        lost = node.store.wipe()
+        requeue = self._drain_dead_node(node)
+        self._resubmit_drained(requeue)
         self.gcs.log_event("node_drained", f"node{node_id}", "cluster",
                            lost_objects=lost, requeued=len(requeue))
 
     def restart_node(self, node_id: int) -> None:
-        """Stateless component restart (R6): fresh node under the same id."""
+        """Stateless component restart (R6): fresh node under the same
+        id. Fail-stop semantics whether or not the old node was already
+        killed: in-flight results are discarded (lineage replay covers
+        them), its store is wiped so no location points at the discarded
+        store, its backlog/run-queue tasks are requeued, and its worker
+        threads are shut down (they would otherwise linger on the dead
+        run queue forever). Mirroring `add_node`, tasks parked for a
+        resource this node provides are then replayed."""
         w, spill, lat = self._node_defaults
         old = self.nodes[node_id]
+        old.alive = False  # in-flight tasks on the old node become LOST
+        old.store.wipe()   # no-op when kill_node already wiped
+        requeue = self._drain_dead_node(old)
+        old.shutdown()
         node = Node(self, node_id, dict(old.capacity), w, spill, lat)
-        self.nodes[node_id] = node
+        self.nodes[node_id] = node  # installed before resubmits target it
+        self.gcs.log_event("node_restart", f"node{node_id}", "cluster",
+                           requeued=len(requeue))
+        self._resubmit_drained(requeue)
+        with self._unsched_lock:
+            parked, self._unschedulable = self._unschedulable, []
+        for spec in parked:
+            self.global_scheduler.submit(spec)
 
     def shutdown(self) -> None:
         self.global_scheduler.shutdown()

@@ -13,12 +13,22 @@ Dataflow gating: a task is *schedulable* iff all its ObjectRef arguments
 are available somewhere in the cluster (the paper's execution model). The
 scheduler subscribes to the control plane's object table for missing
 arguments and re-enqueues the task when the last one lands.
+
+Hop-free spillover (R1/R2): the global scheduler is not a thread. A
+spilling thread calls `place()` synchronously — the spilled task reaches
+the target node's run queue before the submitting call returns, so a
+remote placement costs a placement decision, not a queue handoff plus a
+thread wakeup. Placement decisions serialize only within a task-id shard,
+so concurrent spillers in different shards place in parallel. The target's
+dispatch also skips the redundant second dataflow-gate pass (the spiller
+already verified the deps) and the task's argument objects are eagerly
+pushed to the chosen node so the worker's resolve() hits the local-read
+fast path instead of a fetch round trip.
 """
 from __future__ import annotations
 
-import queue
 import threading
-from typing import TYPE_CHECKING, Dict, List, Optional
+from typing import TYPE_CHECKING, List
 
 from repro.core.control_plane import ControlPlane, TaskSpec
 
@@ -98,6 +108,16 @@ class LocalScheduler:
                     return
                 subs.append(sub)
 
+    def submit_ready(self, spec: TaskSpec) -> None:
+        """Placement entry for the global scheduler: the spiller already
+        ran the dataflow gate before spilling, so skip the redundant
+        dependency re-check and go straight to dispatch. Force-local: a
+        global placement must not re-spill. (If a dep is lost between the
+        spiller's check and execution, the worker's resolve()/fetch
+        triggers lineage replay — the gate is an optimization, not a
+        correctness barrier.)"""
+        self._schedule_ready(spec, force_local=True)
+
     def _schedule_ready(self, spec: TaskSpec, force_local: bool) -> None:
         node = self.node
         if not node.alive or not node.satisfies(spec.resources):
@@ -148,34 +168,23 @@ class LocalScheduler:
 
 
 class GlobalScheduler:
-    """Places spilled tasks by locality + load. One or more instances may
-    run; they share the inbound queue (stateless — control state lives in
-    the GCS, so a crashed global scheduler is simply restarted)."""
+    """Places spilled tasks by locality + load, synchronously on the
+    spilling thread — no inbox queue, no scheduler thread, no handoff.
+    Decisions serialize per task-id shard only (concurrent spillers in
+    different shards place in parallel). Stateless: control state lives
+    in the GCS, so 'restarting' a global scheduler is a no-op."""
 
-    def __init__(self, cluster: "Cluster", num_threads: int = 1):
+    def __init__(self, cluster: "Cluster", num_shards: int = 1):
         self.cluster = cluster
         self.gcs = cluster.gcs
-        self.inbox: "queue.Queue[Optional[TaskSpec]]" = queue.Queue()
-        self._threads = [
-            threading.Thread(target=self._loop, name=f"global-sched-{i}",
-                             daemon=True)
-            for i in range(num_threads)]
-        for t in self._threads:
-            t.start()
+        self._locks = [threading.Lock() for _ in range(max(1, num_shards))]
 
     def submit(self, spec: TaskSpec) -> None:
-        self.inbox.put(spec)
-
-    def _loop(self) -> None:
-        while True:
-            spec = self.inbox.get()
-            if spec is None:
-                return
-            try:
-                self._place(spec)
-            except Exception as e:  # pragma: no cover
-                self.gcs.log_event("sched_error", spec.task_id, "global",
-                                   error=repr(e))
+        try:
+            self.place(spec)
+        except Exception as e:  # pragma: no cover
+            self.gcs.log_event("sched_error", spec.task_id, "global",
+                               error=repr(e))
 
     def _locality_bytes(self, spec: TaskSpec, node: "Node") -> int:
         total = 0
@@ -184,23 +193,26 @@ class GlobalScheduler:
                 total += node.store.bytes_of(oid)
         return total
 
-    def _place(self, spec: TaskSpec) -> None:
-        nodes = [n for n in self.cluster.nodes if n.alive
-                 and n.satisfies(spec.resources)]
-        if not nodes:
-            # no node can ever satisfy: park until topology changes
-            self.cluster.park_unschedulable(spec)
-            return
-        best, best_score = None, None
-        for n in nodes:
-            score = (self._locality_bytes(spec, n)
-                     - 4096.0 * n.load())          # bytes-equivalent penalty
-            if best_score is None or score > best_score:
-                best, best_score = n, score
+    def place(self, spec: TaskSpec) -> None:
+        with self._locks[hash(spec.task_id) % len(self._locks)]:
+            nodes = [n for n in self.cluster.nodes if n.alive
+                     and n.satisfies(spec.resources)]
+            if not nodes:
+                # no node can ever satisfy: park until topology changes
+                self.cluster.park_unschedulable(spec)
+                return
+            best, best_score = None, None
+            for n in nodes:
+                score = (self._locality_bytes(spec, n)
+                         - 4096.0 * n.load())      # bytes-equivalent penalty
+                if best_score is None or score > best_score:
+                    best, best_score = n, score
+        # outside the shard lock: transfer + dispatch don't need to
+        # serialize with other placement decisions
         self.gcs.log_event("sched_global", spec.task_id,
                            f"node{best.node_id}")
-        best.local_scheduler.submit(spec, force_local=True)
+        best.prefetch_args(spec)
+        best.local_scheduler.submit_ready(spec)
 
     def shutdown(self) -> None:
-        for _ in self._threads:
-            self.inbox.put(None)
+        """Kept for interface compatibility; there is nothing to stop."""

@@ -50,7 +50,11 @@ class SimCosts:
         runs = doc.get("runs", {})
         data = runs.get(run) if run else None
         if data is None:
-            data = runs.get("pr1") or runs.get("seed")
+            # default to the most recently recorded run (microbench
+            # stamps it in "speedup_run"), then older fallbacks
+            latest = doc.get("speedup_run")
+            data = (runs.get(latest) if latest else None) \
+                or runs.get("pr2") or runs.get("pr1") or runs.get("seed")
         if not data:
             return cls()
         try:

@@ -70,14 +70,24 @@ def execute_task(node: "Node", spec: TaskSpec, who: str) -> None:
             for rid in spec.return_ids:
                 gcs.notify_lost(rid)
     except Exception:  # noqa: BLE001
-        err = TaskError(
-            f"task {spec.task_id} ({spec.func_name}) failed:\n"
-            + traceback.format_exc())
-        for rid in spec.return_ids:
-            node.store.put(rid, err)
-        gcs.set_task_state(spec.task_id, TASK_DONE)
-        gcs.log_event("error", spec.task_id,
-                      f"node{node.node_id}/{who}")
+        if node.alive:  # mirror the success path's liveness check
+            err = TaskError(
+                f"task {spec.task_id} ({spec.func_name}) failed:\n"
+                + traceback.format_exc())
+            for rid in spec.return_ids:
+                node.store.put(rid, err)
+            gcs.set_task_state(spec.task_id, TASK_DONE)
+            gcs.log_event("error", spec.task_id,
+                          f"node{node.node_id}/{who}")
+        else:
+            # a killed node's failing task is LOST, not DONE: discard the
+            # error, wake blocked fetchers so lineage replay reruns the
+            # task on a live node
+            gcs.set_task_state(spec.task_id, TASK_LOST)
+            gcs.log_event("error", spec.task_id,
+                          f"node{node.node_id}/{who}", lost=True)
+            for rid in spec.return_ids:
+                gcs.notify_lost(rid)
     finally:
         _worker_ctx.node = prev_node
         _worker_ctx.spec = prev_spec

@@ -1,0 +1,204 @@
+"""Regression tests for the PR 2 core-runtime bugfix sweep:
+
+* `RemoteFunction.submit` re-registered the function in the GCS on every
+  submit (`is id(cluster)` guard was always false-y) — now one
+  `register_function` write per cluster epoch;
+* `wait(refs, num_returns)` hung until timeout when `refs` contained
+  duplicates (completions dedup into a set of ids but `num_returns` was
+  clamped to `len(refs)`);
+* `Cluster.restart_node` leaked the dead node's worker threads and never
+  drained `_unschedulable`;
+* `execute_task`'s exception path marked a killed node's failing task
+  DONE (success path correctly marked LOST), stranding lineage replay;
+* `get(list_of_refs, timeout)` applied the full timeout per element
+  (N x timeout worst case) instead of one shared deadline.
+"""
+import time
+
+import pytest
+
+from repro import core
+from repro.core.api import ObjectRef
+from repro.core.control_plane import TASK_LOST, TaskSpec
+from repro.core.worker import TaskError, execute_task
+
+
+@pytest.fixture()
+def cluster():
+    c = core.init(num_nodes=2, workers_per_node=2)
+    yield c
+    core.shutdown()
+
+
+# ------------------------------------------- one registration per cluster
+
+def test_register_function_once_per_cluster(cluster):
+    @core.remote
+    def f():
+        return 1
+
+    gcs = cluster.gcs
+    calls = []
+    orig = gcs.register_function
+
+    def counting(name, fn):
+        calls.append(name)
+        return orig(name, fn)
+
+    gcs.register_function = counting
+    try:
+        refs = [f.submit() for _ in range(25)]
+        assert core.get(refs) == [1] * 25
+    finally:
+        gcs.register_function = orig
+    assert len(calls) == 1, (
+        f"{len(calls)} GCS registration writes for one cluster; the "
+        "epoch guard should allow exactly one")
+
+
+def test_reregisters_on_fresh_cluster():
+    @core.remote
+    def g():
+        return 2
+
+    try:
+        c1 = core.init(num_nodes=1, workers_per_node=1)
+        assert core.get(g.submit()) == 2
+        c2 = core.init(num_nodes=1, workers_per_node=1)  # tears down c1
+        assert c2.epoch != c1.epoch
+        # the new cluster's GCS is empty; the epoch guard must notice and
+        # re-register rather than skip (the old id()-reuse hazard)
+        assert core.get(g.submit()) == 2
+    finally:
+        core.shutdown()
+
+
+# -------------------------------------------------- wait() with duplicates
+
+def test_wait_duplicate_refs_returns_promptly(cluster):
+    @core.remote
+    def one():
+        return 1
+
+    r = one.submit()
+    t0 = time.perf_counter()
+    done, pending = core.wait([r, r], num_returns=2, timeout=5.0)
+    elapsed = time.perf_counter() - t0
+    assert elapsed < 2.0, "wait() hung on duplicate refs until timeout"
+    assert done == [r, r] and pending == []
+
+
+def test_wait_duplicates_mixed_with_pending(cluster):
+    @core.remote
+    def one():
+        return 1
+
+    @core.remote
+    def slow():
+        time.sleep(5.0)
+        return 2
+
+    r = one.submit()
+    core.get(r)
+    s = slow.submit()
+    done, pending = core.wait([r, s, r], num_returns=2, timeout=0.5)
+    # only one unique ref is complete; the duplicate must not be counted
+    # twice, but both its occurrences stay aligned in the done list
+    assert done == [r, r] and pending == [s]
+
+
+# -------------------------------------------------------- restart_node
+
+def test_restart_node_shuts_down_old_workers(cluster):
+    old = cluster.nodes[0]
+    old_threads = list(old.workers)
+    cluster.kill_node(0)
+    cluster.restart_node(0)
+    for t in old_threads:
+        t.join(timeout=5.0)
+    assert not any(t.is_alive() for t in old_threads), (
+        "restart_node leaked the dead node's worker threads")
+    # the replacement node works
+    @core.remote
+    def f():
+        return 7
+
+    assert core.get(f.submit()) == 7
+
+
+def test_restart_node_drains_parked_tasks(cluster):
+    node1 = cluster.nodes[1]
+    node1.capacity["accel"] = 1.0
+    node1._avail["accel"] = 1.0
+
+    @core.remote(resources={"accel": 1.0})
+    def on_accel():
+        from repro.core.worker import current_node
+        return current_node().node_id
+
+    cluster.kill_node(1)
+    ref = on_accel.submit()
+    # placement is synchronous now: the unplaceable task is parked by the
+    # time submit returns
+    with cluster._unsched_lock:
+        assert len(cluster._unschedulable) == 1
+    cluster.restart_node(1)
+    assert core.get(ref, timeout=10) == 1
+    with cluster._unsched_lock:
+        assert not cluster._unschedulable
+
+
+def test_restart_live_node_requeues_queued_work(cluster):
+    """Restarting a live, busy node must not strand its queued tasks in
+    the abandoned run queue/backlog — they are requeued (and in-flight
+    work is recovered by lineage replay), mirroring kill_node."""
+    @core.remote
+    def slow(i):
+        time.sleep(0.1)
+        return i
+
+    refs = [slow.submit(i) for i in range(8)]
+    cluster.restart_node(0)
+    assert sorted(core.get(refs, timeout=30)) == list(range(8))
+
+
+# ------------------------------------- dead node's failing task is LOST
+
+def test_failing_task_on_dead_node_marked_lost(cluster):
+    gcs = cluster.gcs
+
+    def boom():
+        raise ValueError("kaboom")
+
+    gcs.register_function("bugfixes.boom", boom)
+    spec = TaskSpec(task_id="tdead", func_name="bugfixes.boom", args=(),
+                    kwargs={}, return_ids=("tdead.r0",),
+                    resources={"cpu": 1.0}, submitter_node=1)
+    gcs.register_task(spec)
+    node0 = cluster.nodes[0]
+    node0.alive = False
+    execute_task(node0, spec, "test")
+    assert gcs.task_state("tdead") == TASK_LOST, (
+        "killed node's failing task must be LOST, not DONE")
+    assert not gcs.locations("tdead.r0")
+    assert not node0.store.contains("tdead.r0")
+    # lineage replay reruns it on a live node, where the genuine failure
+    # surfaces as a TaskError — promptly, because the LOST state (plus
+    # the notify_lost wakeups) lets fetch reconstruct instead of hanging
+    t0 = time.perf_counter()
+    with pytest.raises(TaskError):
+        core.get(ObjectRef("tdead.r0"), timeout=10)
+    assert time.perf_counter() - t0 < 5.0
+
+
+# ------------------------------------------- get(list) shared deadline
+
+def test_get_list_uses_shared_deadline(cluster):
+    refs = [ObjectRef(f"bfnever{i}.r0") for i in range(3)]
+    t0 = time.perf_counter()
+    with pytest.raises(TimeoutError):
+        core.get(refs, timeout=0.4)
+    elapsed = time.perf_counter() - t0
+    assert elapsed < 0.9, (
+        f"get(list) took {elapsed:.2f}s — timeout applied per element "
+        "instead of one shared deadline")

@@ -1,6 +1,8 @@
 """Hot-path regression tests: event-driven (sleep-free) fetch/wait/get,
 striped event log under concurrency, O(1) unsubscribe, batched task
-registration, locked backlog accounting, and the resubmit lost-arg race."""
+registration, locked backlog accounting, the resubmit lost-arg race, and
+the PR 2 hop-free remote path (synchronous spillover placement, eager
+argument push, completion-notify wait channel)."""
 import inspect
 import threading
 import time
@@ -236,3 +238,141 @@ def test_wait_on_done_refs_creates_no_subscriptions(cluster):
         gcs.subscribe = orig
     assert len(done) == 3 and not pending
     assert not calls, "wait() subscribed despite all refs being complete"
+
+
+# --------------------------------------- hop-free spillover placement
+
+def _mkspec(task_id, func_name, args, resources):
+    return TaskSpec(task_id=task_id, func_name=func_name, args=args,
+                    kwargs={}, return_ids=(f"{task_id}.r0",),
+                    resources=resources, submitter_node=0)
+
+
+def test_global_scheduler_has_no_threads(cluster):
+    """The global scheduler is hop-free: no inbox queue, no scheduler
+    thread — spillers place synchronously on their own thread."""
+    gs = cluster.global_scheduler
+    assert not hasattr(gs, "inbox")
+    assert not hasattr(gs, "_threads")
+    assert not [t for t in threading.enumerate()
+                if t.name.startswith("global-sched")]
+
+
+def test_spillover_places_on_the_spilling_thread(cluster):
+    cluster.nodes[1].capacity["accel"] = 1.0
+    cluster.nodes[1]._avail["accel"] = 1.0
+
+    @core.remote(resources={"accel": 1.0})
+    def on_accel():
+        return "ok"
+
+    gs = cluster.global_scheduler
+    placer_threads = []
+    orig_place = gs.place
+
+    def recording_place(spec):
+        placer_threads.append(threading.current_thread())
+        return orig_place(spec)
+
+    gs.place = recording_place
+    try:
+        refs = [on_accel.submit() for _ in range(8)]
+        assert core.get(refs) == ["ok"] * 8
+    finally:
+        gs.place = orig_place
+    # every submit whose entry node lacked the resource spilled, and each
+    # placement ran inline on the submitting (main) thread
+    assert placer_threads
+    assert set(placer_threads) == {threading.main_thread()}
+
+
+def test_global_placement_prefers_locality_and_skips_dataflow_gate(cluster):
+    gcs = cluster.gcs
+
+    class Fat:
+        nbytes = 1 << 20
+
+    cluster.nodes[1].store.put("hotloc:fat", Fat())
+    gcs.register_function("hot_path.where",
+                          lambda x: __import__(
+                              "repro.core.worker", fromlist=["current_node"]
+                          ).current_node().node_id)
+    spec = _mkspec("tloc", "hot_path.where", (ObjectRef("hotloc:fat"),),
+                   {"cpu": 1.0})
+    gcs.register_task(spec)
+
+    # the placement entry must bypass the LocalScheduler dataflow-gate
+    # re-check (the spiller already verified deps)
+    gate_calls = []
+    for n in cluster.nodes:
+        orig = n.local_scheduler.submit
+        n.local_scheduler.submit = (
+            lambda s, force_local=False, _o=orig:
+            (gate_calls.append(s.task_id), _o(s, force_local))[1])
+
+    cluster.global_scheduler.submit(spec)
+    assert core.get(ObjectRef("tloc.r0"), timeout=10) == 1, \
+        "placement ignored the 1MB argument resident on node 1"
+    assert "tloc" not in gate_calls, \
+        "global placement re-entered the dataflow gate on the target"
+
+
+def test_cross_node_placement_prefetches_args(cluster):
+    """Eager argument push: by the time place() returns, the argument
+    object is resident on the chosen node — the worker's resolve() is a
+    local read, not a fetch round trip."""
+    gcs = cluster.gcs
+    cluster.nodes[1].capacity["accel"] = 1.0
+    cluster.nodes[1]._avail["accel"] = 1.0
+    cluster.nodes[0].store.put("hotpre:x", list(range(50)))
+    assert not cluster.nodes[1].store.contains("hotpre:x")
+
+    gcs.register_function("hot_path.total", lambda x: sum(x))
+    spec = _mkspec("tpre", "hot_path.total", (ObjectRef("hotpre:x"),),
+                   {"accel": 1.0})
+    gcs.register_task(spec)
+    cluster.global_scheduler.submit(spec)
+    # placement is synchronous and pushed the argument before dispatch
+    assert cluster.nodes[1].store.contains("hotpre:x")
+    assert core.get(ObjectRef("tpre.r0"), timeout=10) == sum(range(50))
+    kinds = [e[1] for e in gcs.events()]
+    assert "prefetch" in kinds
+
+
+# ------------------------------------------- completion-notify channel
+
+def test_wait_uses_completion_channel_not_pubsub(cluster):
+    """A blocked wait() must not create object-table subscriptions — its
+    wakeup rides the dedicated completion-notify channel."""
+    gcs = cluster.gcs
+    calls = []
+    orig = gcs.subscribe
+
+    def counting_subscribe(*a, **kw):
+        calls.append(a)
+        return orig(*a, **kw)
+
+    gcs.subscribe = counting_subscribe
+    try:
+        done, pending = core.wait([ObjectRef("hotwait:never")],
+                                  num_returns=1, timeout=0.2)
+    finally:
+        gcs.subscribe = orig
+    assert done == [] and len(pending) == 1
+    assert not calls, "wait() fell back to object-table pub-sub"
+    # and the waiter registry is cleaned up after the call
+    assert not any(gcs._wait_maps)
+
+
+def test_wait_woken_by_completion_notify(cluster):
+    @core.remote
+    def slowish():
+        time.sleep(0.05)
+        return 3
+
+    t0 = time.perf_counter()
+    done, pending = core.wait([slowish.submit()], num_returns=1, timeout=10)
+    elapsed = time.perf_counter() - t0
+    assert len(done) == 1 and not pending
+    assert elapsed < 5.0, "completion notify never woke the waiter"
+
