@@ -3,14 +3,15 @@
 Paper targets (their prototype): submit ~35us, get-after-done ~110us,
 empty-task e2e ~290us local / ~1ms remote. We measure those four
 quantities on our runtime plus the node-local get fast path, wait() wakeup
-latency, raw control-plane op latency, and task throughput.
+latency, raw control-plane op latency, the stateful-actor method-call
+round trip, and task throughput.
 
 Results land in two places:
 
   * ``benchmarks/results/microbench.json`` — this run only (feeds the DES
     simulator's cost model via ``SimCosts.from_microbench``);
   * ``BENCH_core.json`` at the repo root — the tracked perf trajectory.
-    Each invocation upserts its ``--run-name`` entry (default ``pr2``) and
+    Each invocation upserts its ``--run-name`` entry (default ``pr3``) and
     preserves the other entries (notably ``seed``, the pre-PR1 baseline),
     then recomputes speedups vs the seed. Regenerate with:
 
@@ -86,10 +87,11 @@ def run(n: int = 2000) -> dict:
     out["get_done"] = _bench(lambda: core.get(ref), n)
 
     # 3. in-worker get() of a node-local object — the zero-round-trip
-    #    fast path (single store read)
+    #    fast path (single store read). The ref travels as its raw id
+    #    string (a ref in a container arg is now a resolved dependency).
     @core.remote
-    def local_get_loop(boxed, m):
-        r = boxed[0]
+    def local_get_loop(rid, m):
+        r = core.ObjectRef(rid)
         core.get(r)  # ensure a local replica exists (transfer at most once)
         ts = []
         for _ in range(m):
@@ -99,7 +101,7 @@ def run(n: int = 2000) -> dict:
         return ts
 
     lref = core.put(list(range(10)))
-    out["local_get"] = _stats(core.get(local_get_loop.submit((lref,), n)))
+    out["local_get"] = _stats(core.get(local_get_loop.submit(lref.id, n)))
 
     # 4. end-to-end: submit empty task + get result (local node)
     out["e2e_local"] = _bench(lambda: core.get(empty.submit()), max(n // 4, 50))
@@ -133,6 +135,20 @@ def run(n: int = 2000) -> dict:
     assert not pending
     out["throughput_tasks_per_s"] = m / (time.perf_counter() - t0)
 
+    # 9. stateful actor: no-op method-call round trip (seq issue + call
+    #    log + mailbox dispatch + get). Acceptance: within 2x of
+    #    e2e_local. Last so the actor's standing cpu reservation cannot
+    #    perturb the task-path sections above.
+    @core.remote
+    class Pinger:
+        def ping(self):
+            return None
+
+    handle = Pinger.submit()
+    core.get(handle.ping.submit())  # wait for construction
+    out["actor_call"] = _bench(lambda: core.get(handle.ping.submit()),
+                               max(n // 4, 50))
+
     core.shutdown()
     out["paper_targets_us"] = PAPER_TARGETS_US
     return out
@@ -156,7 +172,7 @@ def update_bench_file(measurements: dict, run_name: str = "pr1",
         cur = runs[run_name]
         speedup = {}
         for key in ("submit", "get_done", "local_get", "e2e_local",
-                    "e2e_remote", "wait_one", "gcs_put"):
+                    "e2e_remote", "wait_one", "gcs_put", "actor_call"):
             if key in seed and key in cur and cur[key]["p50_us"] > 0:
                 speedup[f"{key}_p50"] = round(
                     seed[key]["p50_us"] / cur[key]["p50_us"], 2)
@@ -173,11 +189,13 @@ def update_bench_file(measurements: dict, run_name: str = "pr1",
 
 def check_regression(measurements: dict, ref_run: str,
                      path: Path = BENCH_FILE,
-                     keys=("e2e_remote", "wait_one"),
+                     keys=("e2e_remote", "wait_one", "actor_call"),
                      slack: float = None) -> bool:
-    """CI guard: the hop-free remote path and the wait notify path must
-    not regress vs the committed BENCH_core.json record. The slack factor
-    absorbs CI-machine jitter (override via BENCH_REGRESSION_SLACK)."""
+    """CI guard: the hop-free remote path, the wait notify path, and the
+    actor method-call path must not regress vs the committed
+    BENCH_core.json record. Keys absent from the reference run (e.g.
+    actor_call before PR 3) are skipped. The slack factor absorbs
+    CI-machine jitter (override via BENCH_REGRESSION_SLACK)."""
     if slack is None:
         slack = float(os.environ.get("BENCH_REGRESSION_SLACK", "3.0"))
     try:
@@ -191,6 +209,10 @@ def check_regression(measurements: dict, ref_run: str,
         return True
     ok = True
     for key in keys:
+        if key not in ref:
+            print(f"bench-check {key}: not in reference run "
+                  f"{ref_run!r}; skipping")
+            continue
         cur = measurements[key]["p50_us"]
         committed = ref[key]["p50_us"]
         limit = committed * slack
@@ -218,6 +240,8 @@ def rows():
     yield ("microbench.wait_one_us", out["wait_one"]["p50_us"],
            "event-driven wakeup")
     yield ("microbench.gcs_put_us", out["gcs_put"]["p50_us"], "sub-ms control plane")
+    yield ("microbench.actor_call_us", out["actor_call"]["p50_us"],
+           "stateful actor method round trip")
     yield ("microbench.throughput_tasks_s", out["throughput_tasks_per_s"],
            "single-process")
 
@@ -229,7 +253,7 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="quick CI run: small n, does not touch "
                          "BENCH_core.json")
-    ap.add_argument("--run-name", default="pr2",
+    ap.add_argument("--run-name", default="pr3",
                     help="entry name in BENCH_core.json")
     ap.add_argument("--out", default=None,
                     help="override BENCH_core.json path")

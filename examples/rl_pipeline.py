@@ -1,14 +1,19 @@
 """The paper's motivating example (Fig. 1b / §2): an RL loop where parallel
-simulations feed policy updates, built on futures + wait, with optional
-fault injection.
+simulations feed policy updates, built on futures + wait + a stateful
+policy actor, with optional fault injection.
 
 Run:  PYTHONPATH=src python examples/rl_pipeline.py [--kill-node]
 
-A tiny REINFORCE-style agent learns a bandit-ish task: the policy is a JAX
-MLP; rollouts are remote CPU tasks (heterogeneous durations); updates
-consume rollouts in completion order (wait) so stragglers never stall the
-learner; simulation tasks for the *next* policy version launch while the
-current batch is still draining (dynamic task graph).
+A tiny REINFORCE-style agent learns a bandit-ish task. The policy lives in
+a `PolicyLearner` *actor*: rollout batches stream into `update` method
+calls (ordered method futures — updates apply in submission order even
+though nothing blocks), and each generation of simulations takes the
+latest `weights()` *future* as its argument, so the dataflow graph wires
+actor state straight into downstream tasks. Rollouts are remote CPU tasks
+(heterogeneous durations) consumed in completion order (wait), so
+stragglers never stall the learner; `--kill-node` may land on the
+learner's node, in which case the actor restarts elsewhere and replays
+its update log (or restores its `__getstate__` checkpoint).
 """
 import argparse
 import time
@@ -41,6 +46,37 @@ def make_policy():
     return w, act, update
 
 
+@core.remote(checkpoint_interval=8)
+class PolicyLearner:
+    """Stateful policy owner: consumes rollout batches, emits weights."""
+
+    def __init__(self):
+        self.w, self._act, self._update = make_policy()
+        self.updates = 0
+
+    def update(self, batch):
+        if not batch:   # a wait() timeout can hand us an empty batch
+            return 0.0
+        obs = jnp.stack([b[0] for b in batch])
+        acts = jnp.stack([b[1] for b in batch])
+        rews = jnp.array([b[2] for b in batch])
+        self.w = self._update(self.w, obs, acts, rews)
+        self.updates += 1
+        return float(rews.mean())
+
+    def weights(self):
+        return jax.tree.map(np.asarray, self.w)
+
+    def __getstate__(self):
+        return {"w": jax.tree.map(np.asarray, self.w),
+                "updates": self.updates}
+
+    def __setstate__(self, state):
+        _, self._act, self._update = make_policy()
+        self.w = jax.tree.map(jnp.asarray, state["w"])
+        self.updates = state["updates"]
+
+
 @core.remote
 def simulate(w_host, seed):
     """Environment rollout (numpy 'physics'): reward is higher when the
@@ -63,15 +99,19 @@ def main():
     args = ap.parse_args()
 
     cluster = core.init(num_nodes=4, workers_per_node=2)
-    w, act, update = make_policy()
+    learner = PolicyLearner.submit()
 
     returns = []
-    w_host = jax.tree.map(np.asarray, w)
-    pending = [simulate.submit(w_host, s) for s in range(16)]
+    # the weights *future* feeds simulations directly — actor state as a
+    # dataflow dependency, no copy through the driver
+    w_ref = learner.weights.submit()
+    pending = [simulate.submit(w_ref, s) for s in range(16)]
     for it in range(args.iters):
         if args.kill_node and it == args.iters // 2:
-            cluster.kill_node(3)
-            print("!! killed node 3 mid-training (lineage replay active)")
+            victim = cluster.gcs.actor_node(learner.actor_id)
+            cluster.kill_node(victim)
+            print(f"!! killed node {victim} (the learner's node) "
+                  "mid-training — actor replay + lineage active")
         # consume in completion order; update on partial batches (R1)
         batch = []
         while pending and len(batch) < 12:
@@ -79,20 +119,20 @@ def main():
                                       num_returns=min(4, len(pending)),
                                       timeout=0.5)
             batch.extend(core.get(done))
-        obs = jnp.stack([b[0] for b in batch])
-        acts = jnp.stack([b[1] for b in batch])
-        rews = jnp.array([b[2] for b in batch])
-        w = update(w, obs, acts, rews)
-        returns.append(float(rews.mean()))
-        # next-generation simulations launch immediately (R3)
-        w_host = jax.tree.map(np.asarray, w)
-        pending += [simulate.submit(w_host, 1000 * it + s)
+        # incremental update: an ordered method future — later weights()
+        # calls are guaranteed to see it
+        ret_ref = learner.update.submit(tuple(batch))
+        returns.append(core.get(ret_ref, timeout=30))
+        # next-generation simulations launch immediately (R3) against the
+        # post-update weights future
+        w_ref = learner.weights.submit()
+        pending += [simulate.submit(w_ref, 1000 * it + s)
                     for s in range(16 - len(pending))]
         if it % 5 == 0 or it == args.iters - 1:
             print(f"iter {it:3d}  mean return {np.mean(returns[-5:]):+.3f}")
 
     improved = np.mean(returns[-5:]) > np.mean(returns[:5])
-    print("policy improved:", improved)
+    print(f"policy improved: {improved} ({len(returns)} updates applied)")
     core.shutdown()
     return 0 if improved else 1
 

@@ -1,6 +1,7 @@
-"""Serve a small LM with batched requests through the core runtime:
-async request admission (futures), wave-batched prefill+decode, wait-driven
-response collection — the paper's R1/R2 shape applied to LLM serving.
+"""Serve a small LM through the actor-backed replica pool: async request
+admission (futures), an N-replica actor serving tier with wait-based
+straggler routing, wave-batched prefill+decode per replica — the paper's
+R1/R2 shape applied to LLM serving, now with stateful serving actors.
 
 Run:  PYTHONPATH=src python examples/serve_llm.py --requests 12
 """
@@ -13,7 +14,7 @@ import numpy as np
 from repro import core
 from repro.configs.registry import get_smoke_config
 from repro.models import build_model
-from repro.serving import Request, ServingEngine
+from repro.serving import ReplicaPool, Request, ServingEngine
 
 
 def main():
@@ -22,14 +23,20 @@ def main():
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--replicas", type=int, default=2)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch).scaled(param_dtype="float32")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = ServingEngine(model, params, max_seq=args.prompt_len + args.max_new + 4)
+    max_seq = args.prompt_len + args.max_new + 4
 
     cluster = core.init(num_nodes=2, workers_per_node=2)
+
+    # each replica actor builds its own engine on its node (model state
+    # never round-trips through the object store)
+    pool = ReplicaPool(lambda: ServingEngine(model, params, max_seq=max_seq),
+                       num_replicas=args.replicas)
 
     @core.remote
     def make_request(i):
@@ -38,29 +45,29 @@ def main():
                                        size=(args.prompt_len,)).astype(np.int32),
                        max_new_tokens=args.max_new)
 
-    @core.remote
-    def serve_wave(reqs):
-        return engine.serve(list(reqs))
-
-    # async admission: requests arrive as futures; waves dispatch as they
-    # fill, results stream back via wait()
+    # async admission: requests arrive as futures; waves dispatch to the
+    # least-loaded replica as they fill, results stream back via wait()
     req_refs = [make_request.submit(i) for i in range(args.requests)]
     wave_refs = []
     pending = req_refs
     while pending:
         done, pending = core.wait(pending, num_returns=min(4, len(pending)),
                                   timeout=5.0)
-        wave_refs.append(serve_wave.submit(tuple(done and core.get(done))))
+        wave_refs.append(pool.submit_wave(core.get(done)))
     t0 = time.perf_counter()
-    responses = [r for ref in wave_refs for r in core.get(ref)]
+    responses = [r for ref in wave_refs for r in core.get(ref, timeout=120)]
     wall = time.perf_counter() - t0
 
     responses.sort(key=lambda r: r.request_id)
     n_tok = sum(len(r.tokens) for r in responses)
-    print(f"served {len(responses)} requests, {n_tok} tokens")
+    print(f"served {len(responses)} requests, {n_tok} tokens "
+          f"on {args.replicas} replica actors")
     lat = sorted(r.latency_s for r in responses)
     print(f"latency p50={lat[len(lat)//2]*1e3:.1f}ms "
           f"p99={lat[-1]*1e3:.1f}ms")
+    for i, st in enumerate(pool.stats()):
+        print(f"  replica {i}: {st['waves_served']} waves, "
+              f"{st['requests_served']} requests")
     for r in responses[:3]:
         print(f"  req {r.request_id}: {r.tokens}")
     core.shutdown()

@@ -1,11 +1,14 @@
 """The paper's primary contribution: a real-time dataflow execution
-framework — futures + dynamic task graphs (api), sharded control plane
-(control_plane), hybrid local/global scheduling (scheduler), in-memory
-object store (object_store), lineage-replay fault tolerance (runtime),
-plus baseline executors (executors) and a cluster-scale discrete-event
-simulator (simulator)."""
-from repro.core.api import (ObjectRef, RemoteFunction, attach, get, init,  # noqa: F401
-                            put, remote, shutdown, wait)
-from repro.core.control_plane import ControlPlane, TaskSpec  # noqa: F401
+framework — futures + dynamic task graphs + stateful actors (api),
+sharded control plane (control_plane), hybrid local/global scheduling
+with per-actor FIFO mailbox lanes (scheduler), in-memory object store
+(object_store), lineage-replay fault tolerance for tasks and actors
+(runtime), plus baseline executors (executors) and a cluster-scale
+discrete-event simulator (simulator)."""
+from repro.core.api import (ActorClass, ActorHandle, ObjectRef,  # noqa: F401
+                            RemoteFunction, attach, get, init, put, remote,
+                            shutdown, wait)
+from repro.core.control_plane import (ActorSpec, ControlPlane,  # noqa: F401
+                                      TaskSpec)
 from repro.core.runtime import Cluster, Node  # noqa: F401
-from repro.core.worker import TaskError  # noqa: F401
+from repro.core.worker import ActorContext, TaskError  # noqa: F401

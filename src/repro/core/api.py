@@ -1,4 +1,4 @@
-"""The paper's programming model (§3.1):
+"""The paper's programming model (§3.1), extended with stateful actors:
 
   1. Task creation is non-blocking; a *future* (ObjectRef) returns
      immediately.
@@ -8,6 +8,17 @@
   4. `get(ref)` blocks for the value.
   5. `wait(refs, num_returns, timeout)` returns (done, pending) — the
      straggler-mitigation primitive (R1/R4).
+  6. `@remote` on a **class** yields an `ActorClass`: `.submit(*ctor)`
+     places a long-lived stateful actor on a node (global scheduler's
+     locality/load scoring) and returns an `ActorHandle`;
+     `handle.method.submit(*args)` returns ObjectRefs exactly like task
+     futures — composable with get/wait and usable as dependencies of
+     downstream tasks. Method calls execute one at a time in a single
+     total order (control-plane sequence numbers + a per-actor FIFO
+     mailbox), even under concurrent callers. Actor state survives node
+     failure by replaying the logged method sequence (or restoring an
+     opt-in `__getstate__` checkpoint and replaying the tail) — the
+     stateful analogue of lineage reconstruction (R6).
 
 Usage:
     cluster = init(num_nodes=4, workers_per_node=2)
@@ -15,12 +26,22 @@ Usage:
     @remote
     def sim(policy, seed): ...
 
-    refs = [sim.submit(p, i) for i in range(100)]
+    @remote
+    class Learner:
+        def __init__(self): self.w = init_weights()
+        def update(self, batch): self.w = step(self.w, batch)
+        def weights(self): return self.w
+
+    learner = Learner.submit()
+    w_ref = learner.weights.submit()          # ordered method future
+    refs = [sim.submit(w_ref, i) for i in range(100)]
     done, pending = wait(refs, num_returns=80, timeout=0.05)
+    learner.update.submit(tuple(get(done)))
 """
 from __future__ import annotations
 
 import functools
+import itertools
 import time
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -63,26 +84,66 @@ class ObjectRef:
         return f"ObjectRef({self.id})"
 
 
+def _check_no_deep_refs(args, kwargs) -> None:
+    """The dependency scanner and worker resolve() see top-level ObjectRef
+    arguments and refs one level inside *plain* list/tuple arguments. A
+    ref anywhere else (nested deeper, in a dict/set, in a tuple subclass
+    like a namedtuple) would silently arrive as an unresolved ObjectRef
+    object, so reject it loudly at submit time."""
+    for a in itertools.chain(args, kwargs.values()):
+        if isinstance(a, ObjectRef):
+            continue                        # resolved
+        if type(a) in (list, tuple):
+            for e in a:
+                if isinstance(e, ObjectRef):
+                    continue                # resolved (one level deep)
+                if _holds_ref(e):
+                    raise TypeError(
+                        "ObjectRef nested more than one container level "
+                        "deep in task arguments is not resolved; pass it "
+                        "at the top level or one level inside a plain "
+                        "list/tuple")
+        elif _holds_ref(a):
+            raise TypeError(
+                f"ObjectRef inside a {type(a).__name__} argument is not "
+                "resolved; pass it at the top level or one level inside "
+                "a plain list/tuple")
+
+
+def _holds_ref(obj) -> bool:
+    if isinstance(obj, ObjectRef):
+        return True
+    if isinstance(obj, dict):
+        return any(_holds_ref(k) or _holds_ref(v) for k, v in obj.items())
+    if isinstance(obj, (list, tuple, set, frozenset)):
+        return any(_holds_ref(e) for e in obj)
+    return False
+
+
 class RemoteFunction:
     def __init__(self, fn, num_returns: int = 1,
                  resources: Optional[Dict[str, float]] = None):
         self._fn = fn
         self.name = f"{fn.__module__}.{fn.__qualname__}"
         self.num_returns = num_returns
-        self.resources = resources or {"cpu": 1.0}
+        self.resources = {"cpu": 1.0} if resources is None else dict(resources)
         self._registered_on: Optional[int] = None
         functools.update_wrapper(self, fn)
 
     def options(self, *, num_returns: Optional[int] = None,
                 resources: Optional[Dict[str, float]] = None
                 ) -> "RemoteFunction":
-        rf = RemoteFunction(self._fn,
-                            num_returns or self.num_returns,
-                            resources or self.resources)
+        # explicit `is None` merge: a falsy override (resources={}) must
+        # take effect, not be silently replaced by the old value
+        rf = RemoteFunction(
+            self._fn,
+            self.num_returns if num_returns is None else num_returns,
+            self.resources if resources is None else resources)
         return rf
 
     def submit(self, *args, **kwargs):
         """Non-blocking task creation; returns future(s) immediately."""
+        _check_no_deep_refs(args, kwargs)
         cluster = _cluster()
         gcs = cluster.gcs
         # register once per cluster, keyed by the cluster's monotonic
@@ -118,18 +179,148 @@ class RemoteFunction:
         return self._fn(*args, **kwargs)
 
 
+class ActorClass:
+    """`@remote` applied to a class. `.submit(*ctor_args)` creates one
+    actor instance somewhere in the cluster and returns an ActorHandle;
+    calling the ActorClass itself instantiates locally (mirroring
+    RemoteFunction.__call__)."""
+
+    def __init__(self, cls, resources: Optional[Dict[str, float]] = None,
+                 checkpoint_interval: int = 0):
+        self._cls = cls
+        self.name = f"{cls.__module__}.{cls.__qualname__}"
+        self.resources = {"cpu": 1.0} if resources is None else dict(resources)
+        self.checkpoint_interval = checkpoint_interval
+        self._registered_on: Optional[int] = None
+        functools.update_wrapper(self, cls, updated=())
+
+    def options(self, *, resources: Optional[Dict[str, float]] = None,
+                checkpoint_interval: Optional[int] = None) -> "ActorClass":
+        return ActorClass(
+            self._cls,
+            self.resources if resources is None else resources,
+            self.checkpoint_interval if checkpoint_interval is None
+            else checkpoint_interval)
+
+    def submit(self, *args, **kwargs) -> "ActorHandle":
+        """Create the actor: placement via the global scheduler's
+        resource/locality scoring, construction on the chosen node's
+        dedicated actor thread. Non-blocking — the handle returns
+        immediately; a constructor failure surfaces as a TaskError on the
+        first method result, and an actor no live node can host parks
+        until capacity joins (calls meanwhile are logged and replayed)."""
+        _check_no_deep_refs(args, kwargs)
+        cluster = _cluster()
+        gcs = cluster.gcs
+        if self._registered_on != cluster.epoch:
+            gcs.register_function(self.name, self._cls)
+            self._registered_on = cluster.epoch
+        actor_id = gcs.next_id("a")
+        node = current_node()
+        submitter = node.node_id if node is not None else 0
+        from repro.core.control_plane import ActorSpec
+        aspec = ActorSpec(actor_id=actor_id, class_name=self.name,
+                          args=args, kwargs=kwargs,
+                          resources=self.resources,
+                          submitter_node=submitter,
+                          checkpoint_interval=self.checkpoint_interval)
+        cluster.create_actor(aspec)
+        return ActorHandle(actor_id, self.name, self._cls)
+
+    def __call__(self, *args, **kwargs):
+        return self._cls(*args, **kwargs)
+
+
+class ActorMethod:
+    """One bound remote method; `.submit()` returns an ObjectRef exactly
+    like a task future."""
+
+    __slots__ = ("_handle", "_name")
+
+    def __init__(self, handle: "ActorHandle", name: str):
+        self._handle = handle
+        self._name = name
+
+    def submit(self, *args, **kwargs) -> "ObjectRef":
+        """Non-blocking ordered method call. The control plane issues the
+        actor-wide sequence number (total order across concurrent
+        callers) and logs the call for replay *before* it is routed to
+        the owning node's FIFO mailbox — so a call racing a node failure
+        is never lost, only replayed."""
+        _check_no_deep_refs(args, kwargs)
+        cluster = _cluster()
+        gcs = cluster.gcs
+        h = self._handle
+        task_id = gcs.next_id("t")
+        ret_id = f"{task_id}.r0"
+        node = current_node()
+        submitter = node.node_id if node is not None else 0
+        seq = gcs.next_actor_seq(h.actor_id)
+        from repro.core.control_plane import TaskSpec
+        spec = TaskSpec(task_id=task_id,
+                        func_name=f"{h.class_name}.{self._name}",
+                        args=args, kwargs=kwargs, return_ids=(ret_id,),
+                        resources={},  # rides the actor's standing grant
+                        submitter_node=submitter,
+                        actor_id=h.actor_id, actor_method=self._name,
+                        actor_seq=seq)
+        gcs.register_task(spec)
+        gcs.log_actor_call(h.actor_id, seq, task_id)
+        gcs.log_event("submit_actor", task_id, f"node{submitter}",
+                      actor=h.actor_id, seq=seq)
+        cluster.submit_actor_task(spec)
+        return ObjectRef(ret_id)
+
+
+class ActorHandle:
+    """Reference to a live actor. Attribute access yields ActorMethods:
+    `handle.incr.submit(1)`."""
+
+    def __init__(self, actor_id: str, class_name: str, cls=None):
+        self.actor_id = actor_id
+        self.class_name = class_name
+        self._cls = cls
+
+    def __getattr__(self, name: str) -> ActorMethod:
+        if name.startswith("_"):
+            raise AttributeError(name)
+        if self._cls is not None and not callable(
+                getattr(self._cls, name, None)):
+            raise AttributeError(
+                f"{self.class_name} has no method {name!r}")
+        return ActorMethod(self, name)
+
+    def __repr__(self):
+        return f"ActorHandle({self.actor_id}, {self.class_name})"
+
+
 def remote(fn=None, *, num_returns: int = 1,
-           resources: Optional[Dict[str, float]] = None):
-    """Decorator designating an arbitrary function as a remote task (R4)."""
+           resources: Optional[Dict[str, float]] = None,
+           checkpoint_interval: int = 0):
+    """Decorator designating a function as a remote task (R4), or a class
+    as an actor (stateful task sequence). `checkpoint_interval` applies to
+    classes only: every K completed method calls the actor's
+    `__getstate__` is checkpointed to the control plane, bounding the
+    replay a restart performs."""
+    def wrap(f):
+        if isinstance(f, type):
+            return ActorClass(f, resources, checkpoint_interval)
+        return RemoteFunction(f, num_returns, resources)
     if fn is None:
-        return lambda f: RemoteFunction(f, num_returns, resources)
-    return RemoteFunction(fn, num_returns, resources)
+        return wrap
+    return wrap(fn)
 
 
 def put(value: Any) -> ObjectRef:
+    """Store a value and return its future. Worker puts stay node-local;
+    driver puts round-robin across live nodes (mirroring driver submit)
+    instead of pinning every object on the first node."""
     cluster = _cluster()
     oid = cluster.gcs.next_id("o")
-    node = current_node() or cluster.live_nodes()[0]
+    node = current_node()
+    if node is None:
+        live = cluster.live_nodes()
+        node = live[int(oid[1:]) % len(live)]
     node.store.put(oid, value)
     return ObjectRef(oid)
 

@@ -2,7 +2,8 @@
 
 A sharded in-memory key-value store with publish-subscribe, holding ALL
 system control state: the task table, object table, function table,
-computation lineage, and the profiling event log. Every other component
+actor table (specs, locations, method-sequence counters, replay logs,
+checkpoints), computation lineage, and the profiling event log. Every other component
 (workers, schedulers, object stores) is stateless with respect to control
 state and can be restarted, exactly as the paper prescribes; recovery
 re-reads this store and replays lineage.
@@ -56,6 +57,28 @@ class TaskSpec:
     return_ids: Tuple[str, ...]
     resources: Dict[str, float]
     submitter_node: int
+    created_ts: float = field(default_factory=time.perf_counter)
+    # actor method calls: the owning actor, the method name, and the
+    # control-plane-issued sequence number that totally orders this call
+    # against every other call on the same actor (plain tasks: defaults)
+    actor_id: Optional[str] = None
+    actor_method: Optional[str] = None
+    actor_seq: int = -1
+
+
+@dataclass
+class ActorSpec:
+    """A stateful actor: the class, its constructor arguments, and its
+    resource footprint. Lives in the control plane's actor table so a
+    restarted node (or a fresh one) can reconstruct the actor — lineage
+    for state is the ctor args plus the logged method sequence."""
+    actor_id: str
+    class_name: str
+    args: Tuple[Any, ...]
+    kwargs: Dict[str, Any]
+    resources: Dict[str, float]
+    submitter_node: int
+    checkpoint_interval: int = 0
     created_ts: float = field(default_factory=time.perf_counter)
 
 
@@ -288,6 +311,68 @@ class ControlPlane:
             ws = list(ws)
         for w in ws:
             w.complete(obj_id)
+
+    # ---------------------------------------------------------- actor table
+    # All actor control state lives here (the node holding the instance is
+    # stateless, per the paper's architecture): the ActorSpec, the current
+    # owning node, a monotonic per-actor method-sequence counter that
+    # totally orders calls from concurrent callers, the ordered log of
+    # method-call task ids (replayed to rebuild state after a failure),
+    # and an optional `__getstate__` checkpoint that bounds replay length.
+
+    def register_actor(self, spec: "ActorSpec") -> None:
+        self.put(f"actor:{spec.actor_id}", spec)
+
+    def actor_spec(self, actor_id: str) -> Optional["ActorSpec"]:
+        return self.get(f"actor:{actor_id}")
+
+    def set_actor_node(self, actor_id: str, node: int) -> None:
+        self.put(f"actor_node:{actor_id}", node)
+
+    def actor_node(self, actor_id: str) -> Optional[int]:
+        return self.get(f"actor_node:{actor_id}")
+
+    def next_actor_seq(self, actor_id: str) -> int:
+        """Issue the next method-sequence number for this actor. The
+        control plane is the single ordering authority, so concurrent
+        callers (driver + workers) get a total order their mailbox
+        releases in."""
+        return self.update(f"actor_seq:{actor_id}",
+                           lambda v: (v or 0) + 1) - 1
+
+    def log_actor_call(self, actor_id: str, seq: int,
+                       task_id: str) -> None:
+        """Append a method call to the actor's replay log. Callers log
+        *before* routing to the owning node's mailbox, so a call that
+        races an actor restart is always either delivered or replayed.
+        O(1): the list is mutated in place under the shard lock (the log
+        has no subscribers); checkpointing truncates it, so a
+        checkpointed actor's log stays bounded."""
+        def append(l):
+            if l is None:
+                return [(seq, task_id)]
+            l.append((seq, task_id))
+            return l
+        self.update(f"actor_log:{actor_id}", append)
+
+    def actor_log(self, actor_id: str) -> Tuple[Tuple[int, str], ...]:
+        """Snapshot of the (seq, task_id) replay log, oldest first by
+        append order (seqs may interleave slightly under concurrent
+        callers; the mailbox re-orders on delivery)."""
+        return tuple(self.get(f"actor_log:{actor_id}") or ())
+
+    def set_actor_checkpoint(self, actor_id: str, seq: int,
+                             state: Any) -> None:
+        """Record a `__getstate__` snapshot covering method seqs < `seq`;
+        restart restores it and replays only the log tail. The covered
+        log prefix is dropped — it can never be replayed again (results
+        lost after this point surface as errors, not replays)."""
+        self.put(f"actor_ckpt:{actor_id}", (seq, state))
+        self.update(f"actor_log:{actor_id}",
+                    lambda l: [e for e in (l or []) if e[0] >= seq])
+
+    def actor_checkpoint(self, actor_id: str) -> Optional[Tuple[int, Any]]:
+        return self.get(f"actor_ckpt:{actor_id}")
 
     # ------------------------------------------------------- function table
 

@@ -13,13 +13,15 @@ import itertools
 import queue
 import threading
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.control_plane import (TASK_DONE, TASK_LOST, TASK_PENDING,
-                                      TASK_RUNNING, ControlPlane, TaskSpec)
+                                      TASK_RUNNING, ActorSpec, ControlPlane,
+                                      TaskSpec)
 from repro.core.object_store import MISSING, ObjectStore
-from repro.core.scheduler import GlobalScheduler, LocalScheduler, _ref_ids
-from repro.core.worker import Worker, execute_task
+from repro.core.scheduler import (GlobalScheduler, LocalScheduler,
+                                  UnschedulableActorError, _ref_ids)
+from repro.core.worker import ActorContext, Worker, execute_task
 
 # Bounds inline work-stealing recursion (a steal can fetch its own lost
 # args, which may steal again); past this depth fetch parks on the event.
@@ -45,9 +47,14 @@ class Node:
         self._avail = dict(resources)
         self._res_lock = threading.Lock()
         self._res_cond = threading.Condition(self._res_lock)
+        # standing actor grants: capacity that never returns to the pool
+        # while the actor lives — scheduling must not queue tasks behind it
+        self._actor_reserved: Dict[str, float] = {}
         self.store = ObjectStore(node_id, cluster.gcs, transfer_latency_s)
         self.run_queue: "queue.Queue[Optional[TaskSpec]]" = queue.Queue()
         self.local_scheduler = LocalScheduler(self, spill_threshold)
+        self._actors: Dict[str, ActorContext] = {}
+        self._actors_lock = threading.Lock()
         self.workers = [Worker(self, i) for i in range(num_workers)]
         self._max_workers = max(64, 8 * num_workers)
 
@@ -55,6 +62,44 @@ class Node:
 
     def satisfies(self, req: Dict[str, float]) -> bool:
         return all(self.capacity.get(k, 0.0) >= v for k, v in req.items())
+
+    def satisfies_steady(self, req: Dict[str, float]) -> bool:
+        """Whether the request fits the node's *steady-state* capacity —
+        total capacity minus standing actor reservations. A task that
+        fails this can never run here no matter how long it queues, so
+        the local scheduler spills it instead of backlogging it."""
+        with self._res_lock:
+            return all(
+                self.capacity.get(k, 0.0) - self._actor_reserved.get(k, 0.0)
+                >= v for k, v in req.items())
+
+    def reserve_for_actor(self, req: Dict[str, float]) -> None:
+        with self._res_lock:
+            for k, v in req.items():
+                self._actor_reserved[k] = self._actor_reserved.get(k, 0.0) + v
+        # tasks backlogged before the reservation may now be unsatisfiable
+        # in steady state — push them back out to the global scheduler
+        self.local_scheduler.respill_unsatisfiable()
+
+    def unreserve_for_actor(self, req: Dict[str, float]) -> None:
+        with self._res_lock:
+            for k, v in req.items():
+                self._actor_reserved[k] = max(
+                    0.0, self._actor_reserved.get(k, 0.0) - v)
+        # steady-state capacity just grew: tasks parked because actor
+        # grants covered them everywhere may be placeable now (outside
+        # the lock — the retry re-enters placement, which reads it)
+        self.cluster.drain_unschedulable()
+
+    def standing_reservation(self) -> float:
+        """Locked snapshot of the total standing actor grant (placement
+        reads this concurrently with ActorContext threads reserving)."""
+        with self._res_lock:
+            return sum(self._actor_reserved.values())
+
+    def can_grant_now(self, req: Dict[str, float]) -> bool:
+        with self._res_lock:
+            return all(self._avail.get(k, 0.0) >= v for k, v in req.items())
 
     def _acquire_locked(self, req: Dict[str, float]) -> bool:
         if all(self._avail.get(k, 0.0) >= v for k, v in req.items()):
@@ -158,16 +203,50 @@ class Node:
 
     def resolve(self, arg: Any) -> Any:
         from repro.core.api import ObjectRef
-        if not isinstance(arg, ObjectRef):
-            return arg
-        # node-local fast path: a single store read, no control-plane
-        # round trip and no pub-sub churn
-        val = self.store.get_if_present(arg.id)
-        if val is not MISSING:
-            return val
-        return self.cluster.fetch(arg.id, prefer_node=self.node_id)
+        if isinstance(arg, ObjectRef):
+            # node-local fast path: a single store read, no control-plane
+            # round trip and no pub-sub churn
+            val = self.store.get_if_present(arg.id)
+            if val is not MISSING:
+                return val
+            return self.cluster.fetch(arg.id, prefer_node=self.node_id)
+        # refs one level inside plain list/tuple args resolve too (the
+        # dependency scan counts them, so they are guaranteed available);
+        # subclasses (e.g. namedtuples) pass through untouched
+        if type(arg) in (list, tuple) and any(
+                isinstance(e, ObjectRef) for e in arg):
+            return type(arg)(self.resolve(e) for e in arg)
+        return arg
+
+    # -------------------------------------------------------------- actors
+
+    def start_actor(self, aspec: ActorSpec, start_seq: int = 0,
+                    checkpoint: Any = None) -> ActorContext:
+        """Install the actor's execution context + mailbox, then publish
+        this node as the owner. Publish-last matters: a method call that
+        reads the new location always finds a live mailbox."""
+        ctx = ActorContext(self, aspec, start_seq, checkpoint)
+        with self._actors_lock:
+            self._actors[aspec.actor_id] = ctx
+        self.gcs.set_actor_node(aspec.actor_id, self.node_id)
+        return ctx
+
+    def actor_context(self, actor_id: str) -> Optional[ActorContext]:
+        with self._actors_lock:
+            return self._actors.get(actor_id)
+
+    def drain_actors(self) -> List[ActorContext]:
+        """Fail-stop the node's actors: close every mailbox (pending calls
+        are discarded — the replay log owns them) and hand the contexts to
+        the cluster for relocation."""
+        with self._actors_lock:
+            ctxs, self._actors = list(self._actors.values()), {}
+        for ctx in ctxs:
+            ctx.mailbox.close()
+        return ctxs
 
     def shutdown(self) -> None:
+        self.drain_actors()   # closes every actor mailbox
         for w in self.workers:
             w.shutdown()
 
@@ -188,6 +267,7 @@ class Cluster:
         # num_global_schedulers now counts placement shards, not threads
         self.global_scheduler = GlobalScheduler(self, num_global_schedulers)
         self._unschedulable: List[TaskSpec] = []
+        self._unschedulable_actors: List[Tuple[ActorSpec, int]] = []
         self._unsched_lock = threading.Lock()
         self.nodes: List[Node] = []
         res = resources_per_node or {"cpu": float(workers_per_node)}
@@ -204,18 +284,121 @@ class Cluster:
         res = dict(resources or {"cpu": float(w)})
         node = Node(self, len(self.nodes), res, w, spill, lat)
         self.nodes.append(node)
-        with self._unsched_lock:
-            parked, self._unschedulable = self._unschedulable, []
-        for spec in parked:
-            self.global_scheduler.submit(spec)
+        self.drain_unschedulable()
+        self._retry_parked_actors()
         return node
 
     def park_unschedulable(self, spec: TaskSpec) -> None:
         with self._unsched_lock:
             self._unschedulable.append(spec)
 
+    def drain_unschedulable(self) -> None:
+        """Re-place parked tasks — fired whenever schedulable capacity
+        can have grown (node joined/restarted, actor grant released)."""
+        with self._unsched_lock:
+            parked, self._unschedulable = self._unschedulable, []
+        for spec in parked:
+            self.global_scheduler.submit(spec)
+
     def live_nodes(self) -> List[Node]:
         return [n for n in self.nodes if n.alive]
+
+    # -------------------------------------------------------------- actors
+
+    def create_actor(self, aspec: ActorSpec) -> None:
+        """Register the actor in the control plane, place it with the
+        global scheduler's locality/load scoring, and start its execution
+        context on the chosen node. An actor no live node can host parks
+        — like an unschedulable task — and is placed when capacity joins
+        (method calls submitted meanwhile are logged and replayed)."""
+        self.gcs.register_actor(aspec)
+        try:
+            node = self.global_scheduler.place_actor(aspec)
+        except UnschedulableActorError:
+            self.gcs.log_event("actor_unschedulable", aspec.actor_id,
+                               "cluster")
+            with self._unsched_lock:
+                self._unschedulable_actors.append(
+                    (aspec, aspec.submitter_node))
+            return
+        node.start_actor(aspec)
+
+    def submit_actor_task(self, spec: TaskSpec) -> None:
+        """Route one method call straight to the owning node's mailbox —
+        no spillover, no placement. A call that lands on a closed mailbox
+        (the actor's node died concurrently) is simply dropped: the caller
+        logged it in the control plane before routing, and the restart's
+        log replay delivers it to the new incarnation."""
+        nid = self.gcs.actor_node(spec.actor_id)
+        if nid is None or nid >= len(self.nodes):
+            return
+        node = self.nodes[nid]
+        ctx = node.actor_context(spec.actor_id)
+        if ctx is None or not node.alive:
+            return
+        # submit's condition notify wakes the actor thread; a dropped call
+        # (closed mailbox) is covered by the restart's log replay
+        ctx.mailbox.submit(spec)
+
+    def _try_actor_inline(self, spec: TaskSpec) -> bool:
+        """Work-stealing for actor lanes: a getter blocked on a method
+        result drains the owning actor's ready, in-order calls on its own
+        thread (run_ready serializes against the actor thread). Returns
+        True if any method ran."""
+        nid = self.gcs.actor_node(spec.actor_id)
+        if nid is None or nid >= len(self.nodes):
+            return False
+        node = self.nodes[nid]
+        if not node.alive:
+            return False
+        ctx = node.actor_context(spec.actor_id)
+        if ctx is None:
+            return False
+        return ctx.run_ready("steal") > 0
+
+    def _restart_actors(self, ctxs: List["ActorContext"],
+                        from_node_id: int) -> None:
+        """Relocate actors drained off a fail-stopped node: re-place via
+        the global scheduler, restore the latest `__getstate__`
+        checkpoint if one exists (else re-run the constructor), and replay
+        the logged method sequence past the checkpoint — the actor-state
+        analogue of task lineage reconstruction. Replayed calls re-store
+        their results, waking any fetcher blocked on a wiped object."""
+        for old_ctx in ctxs:
+            self._relocate_actor(old_ctx.aspec, from_node_id)
+
+    def _relocate_actor(self, aspec: ActorSpec, from_node_id: int) -> None:
+        try:
+            target = self.global_scheduler.place_actor(aspec)
+        except UnschedulableActorError:
+            # no live node can host it right now: park — add_node /
+            # restart_node retries (method calls submitted meanwhile are
+            # logged and dropped, so the eventual replay delivers them)
+            self.gcs.log_event("actor_unschedulable", aspec.actor_id,
+                               "cluster")
+            with self._unsched_lock:
+                self._unschedulable_actors.append((aspec, from_node_id))
+            return
+        ckpt = self.gcs.actor_checkpoint(aspec.actor_id)
+        start_seq, state = ckpt if ckpt is not None else (0, None)
+        new_ctx = target.start_actor(aspec, start_seq, state)
+        self.gcs.log_event(
+            "actor_restart", aspec.actor_id,
+            f"node{from_node_id}->node{target.node_id}",
+            replay_from=start_seq)
+        for seq, tid in self.gcs.actor_log(aspec.actor_id):
+            if seq < start_seq:
+                continue
+            mspec = self.gcs.task_spec(tid)
+            if mspec is not None:
+                new_ctx.mailbox.submit(mspec)
+
+    def _retry_parked_actors(self) -> None:
+        with self._unsched_lock:
+            parked, self._unschedulable_actors = (
+                self._unschedulable_actors, [])
+        for aspec, from_nid in parked:
+            self._relocate_actor(aspec, from_nid)
 
     # ------------------------------------------------------------ fetching
 
@@ -285,6 +468,15 @@ class Cluster:
             return False
         if self.gcs.task_state(task_id) != TASK_PENDING:
             return False
+        spec = self.gcs.task_spec(task_id)
+        if spec is not None and spec.actor_id is not None:
+            # actor lane: drain ready in-order calls inline instead of
+            # scanning run queues (actor methods never sit in them)
+            _steal_ctx.depth = depth + 1
+            try:
+                return self._try_actor_inline(spec)
+            finally:
+                _steal_ctx.depth = depth
         for node in self.nodes:
             if not node.alive:
                 continue
@@ -347,6 +539,32 @@ class Cluster:
         if state not in (TASK_DONE, TASK_LOST):
             return  # still pending/running somewhere
         spec = self.gcs.task_spec(task_id)
+        if spec.actor_id is not None:
+            # actor-method results are not individually replayable (they
+            # depend on actor state); kill/restart replays the logged
+            # sequence, which re-stores this object and wakes the blocked
+            # fetcher via add_location. The exception: a result produced
+            # before a `__getstate__` checkpoint is outside every future
+            # replay — store a clear error so fetchers fail fast instead
+            # of hanging to their timeout.
+            ckpt = self.gcs.actor_checkpoint(spec.actor_id)
+            if (ckpt is not None and 0 <= spec.actor_seq < ckpt[0]
+                    and not any(self._live_locs(rid)
+                                for rid in spec.return_ids)):
+                live = self.live_nodes()
+                if live:
+                    from repro.core.worker import TaskError
+                    err = TaskError(
+                        f"actor method result {spec.task_id} "
+                        f"({spec.func_name}, seq {spec.actor_seq}) was "
+                        f"lost and predates the actor's checkpoint "
+                        f"(seq {ckpt[0]}); it cannot be replayed")
+                    self.gcs.log_event("actor_result_unrecoverable",
+                                       spec.task_id, "lineage")
+                    for rid in spec.return_ids:
+                        if not self._live_locs(rid):
+                            live[0].store.put(rid, err)
+            return
         # all returns must be missing-or-lost to warrant replay
         if any(self._live_locs(rid) for rid in spec.return_ids):
             return
@@ -370,19 +588,20 @@ class Cluster:
                 if n < len(self.nodes) and self.nodes[n].alive]
 
     def resubmit(self, spec: TaskSpec) -> None:
-        # lost args must be reconstructed before the dataflow gate sees them
-        from repro.core.api import ObjectRef
+        # lost args must be reconstructed before the dataflow gate sees
+        # them — scan with _ref_ids so container-nested refs (which the
+        # gate counts as dependencies) are reconstructed too
         dead = frozenset(n for n, node in enumerate(self.nodes)
                          if not node.alive)
-        for a in list(spec.args) + list(spec.kwargs.values()):
-            if isinstance(a, ObjectRef) and not self._live_locs(a.id):
+        for oid in _ref_ids(spec):
+            if not self._live_locs(oid):
                 # subtract only dead nodes' locations: a concurrent
                 # producer may have registered a fresh live copy between
                 # the check above and this update, and clobbering the set
                 # to empty would orphan it
-                self.gcs.update(f"obj:{a.id}",
+                self.gcs.update(f"obj:{oid}",
                                 lambda s: (s or frozenset()) - dead)
-                self.maybe_reconstruct(a.id)
+                self.maybe_reconstruct(oid)
         target = (self.nodes[spec.submitter_node]
                   if spec.submitter_node < len(self.nodes)
                   and self.nodes[spec.submitter_node].alive
@@ -415,6 +634,7 @@ class Cluster:
         lost = node.store.wipe()
         requeue = self._drain_dead_node(node)
         self._resubmit_drained(requeue)
+        self._restart_actors(node.drain_actors(), node_id)
         self.gcs.log_event("node_drained", f"node{node_id}", "cluster",
                            lost_objects=lost, requeued=len(requeue))
 
@@ -432,16 +652,18 @@ class Cluster:
         old.alive = False  # in-flight tasks on the old node become LOST
         old.store.wipe()   # no-op when kill_node already wiped
         requeue = self._drain_dead_node(old)
+        dead_actors = old.drain_actors()  # before shutdown clears them
         old.shutdown()
         node = Node(self, node_id, dict(old.capacity), w, spill, lat)
         self.nodes[node_id] = node  # installed before resubmits target it
         self.gcs.log_event("node_restart", f"node{node_id}", "cluster",
                            requeued=len(requeue))
         self._resubmit_drained(requeue)
-        with self._unsched_lock:
-            parked, self._unschedulable = self._unschedulable, []
-        for spec in parked:
-            self.global_scheduler.submit(spec)
+        # actors drained off the old node — plus any parked as
+        # unschedulable by an earlier kill — may place onto the fresh one
+        self._restart_actors(dead_actors, node_id)
+        self._retry_parked_actors()
+        self.drain_unschedulable()
 
     def shutdown(self) -> None:
         self.global_scheduler.shutdown()

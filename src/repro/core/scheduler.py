@@ -24,11 +24,20 @@ dispatch also skips the redundant second dataflow-gate pass (the spiller
 already verified the deps) and the task's argument objects are eagerly
 pushed to the chosen node so the worker's resolve() hits the local-read
 fast path instead of a fetch round trip.
+
+Actors: stateful `@remote` classes bypass all of the above on the method
+path. Actor *placement* reuses the global scheduler's locality/load
+scoring once, at creation; every subsequent method call routes straight
+to the owning node's per-actor `ActorMailbox` — a FIFO lane that releases
+calls in the control plane's sequence order, never spills, and never
+re-places. That is what preserves method ordering under concurrent
+callers while keeping the call path as short as a local task dispatch.
 """
 from __future__ import annotations
 
+import itertools
 import threading
-from typing import TYPE_CHECKING, List
+from typing import TYPE_CHECKING, List, Optional
 
 from repro.core.control_plane import ControlPlane, TaskSpec
 
@@ -39,16 +48,86 @@ if TYPE_CHECKING:  # pragma: no cover
 _ObjectRef = None
 
 
-def _ref_ids(spec: TaskSpec) -> List[str]:
+def _ref_ids(spec) -> List[str]:
+    """ObjectRef dependencies of a task (or actor ctor) spec. Scans the
+    top-level arguments plus one level inside plain list/tuple arguments
+    — a ref nested deeper than that is rejected at submit time (api
+    `_check_no_deep_refs`) rather than silently passed through."""
     if not spec.args and not spec.kwargs:
         return []
     global _ObjectRef
     if _ObjectRef is None:  # lazy: scheduler<->api import cycle
         from repro.core.api import ObjectRef
         _ObjectRef = ObjectRef
-    ids = [a.id for a in spec.args if isinstance(a, _ObjectRef)]
-    ids += [v.id for v in spec.kwargs.values() if isinstance(v, _ObjectRef)]
+    ids: List[str] = []
+    for a in itertools.chain(spec.args, spec.kwargs.values()):
+        if isinstance(a, _ObjectRef):
+            ids.append(a.id)
+        elif type(a) in (list, tuple):
+            ids.extend(e.id for e in a if isinstance(e, _ObjectRef))
     return ids
+
+
+class ActorMailbox:
+    """Per-actor FIFO lane (the actor counterpart of the local run queue).
+
+    Method calls carry control-plane-issued sequence numbers; the mailbox
+    buffers out-of-order arrivals from concurrent callers and releases
+    specs strictly in sequence order through `pop_next`. Keyed by seq, so
+    a restart's log replay and a late direct delivery of the same call
+    dedup naturally, and seqs below the cursor (already executed before a
+    checkpoint) are dropped. Closing the mailbox (node death) discards
+    pending work — every call was logged in the control plane before it
+    was routed here, so the restarted incarnation replays it."""
+
+    __slots__ = ("actor_id", "cond", "closed", "_pending", "_cursor")
+
+    def __init__(self, actor_id: str, start_seq: int = 0):
+        self.actor_id = actor_id
+        self.cond = threading.Condition()
+        self.closed = False
+        self._pending: dict = {}
+        self._cursor = start_seq
+
+    def submit(self, spec: TaskSpec) -> bool:
+        """Deliver one method call; returns False when closed (the caller
+        drops it — the restart replay owns it)."""
+        with self.cond:
+            if self.closed:
+                return False
+            if spec.actor_seq >= self._cursor:
+                self._pending[spec.actor_seq] = spec
+                self.cond.notify_all()
+            return True
+
+    def pop_next(self) -> Optional[TaskSpec]:
+        """Non-blocking in-order release; None when the next seq has not
+        arrived yet or the mailbox is closed."""
+        with self.cond:
+            if self.closed:
+                return None
+            spec = self._pending.pop(self._cursor, None)
+            if spec is not None:
+                self._cursor += 1
+            return spec
+
+    def wait_ready(self) -> bool:
+        """Block until the next in-order call is deliverable (True) or the
+        mailbox is closed (False). Event-driven: woken by submit/close."""
+        with self.cond:
+            while not self.closed and self._cursor not in self._pending:
+                self.cond.wait()
+            return not self.closed
+
+    def close(self) -> None:
+        with self.cond:
+            self.closed = True
+            self._pending.clear()
+            self.cond.notify_all()
+
+
+class UnschedulableActorError(RuntimeError):
+    """No live node satisfies an actor's resource footprint."""
 
 
 class LocalScheduler:
@@ -130,7 +209,13 @@ class LocalScheduler:
                                    f"node{node.node_id}")
                 node.dispatch(spec)
                 return
-            if force_local or len(self._backlog) < self.spill_threshold:
+            # backlog only work this node can eventually run: capacity
+            # held by standing actor grants never frees, so a task that
+            # exceeds steady-state capacity would starve here (a forced
+            # global placement stays — the placer already chose the best
+            # available node, and re-spilling it would loop)
+            if force_local or (len(self._backlog) < self.spill_threshold
+                               and node.satisfies_steady(spec.resources)):
                 self._backlog.append(spec)
                 return
         # overloaded: spill to the global scheduler (paper's "spillover")
@@ -154,6 +239,22 @@ class LocalScheduler:
             self.gcs.log_event("sched_local", nxt.task_id,
                                f"node{node.node_id}")
             node.dispatch(nxt)
+
+    def respill_unsatisfiable(self) -> None:
+        """Called when a standing actor reservation lands: tasks already
+        backlogged that no longer fit steady-state capacity would starve,
+        so hand them back to the global scheduler."""
+        node = self.node
+        with self._lock:
+            stuck = [s for s in self._backlog
+                     if not node.satisfies_steady(s.resources)]
+            if not stuck:
+                return
+            self._backlog = [s for s in self._backlog if s not in stuck]
+        for spec in stuck:
+            self.gcs.log_event("spill", spec.task_id,
+                               f"node{node.node_id}", actor_reserved=True)
+            node.cluster.global_scheduler.submit(spec)
 
     def drain(self) -> List[TaskSpec]:
         with self._lock:
@@ -193,26 +294,78 @@ class GlobalScheduler:
                 total += node.store.bytes_of(oid)
         return total
 
+    def _select_node(self, spec, extra_score=None,
+                     allow_unsteady: bool = False) -> Optional["Node"]:
+        """Shared placement policy: among live nodes whose *steady-state*
+        capacity (total minus standing actor grants) satisfies the
+        request, pick the best locality-minus-load score
+        (bytes-equivalent penalty), plus an optional caller-specific
+        term. None when no such node exists — a task queued where actor
+        grants permanently cover its request would starve, so callers
+        park instead (an actor death or topology change retries it).
+        `allow_unsteady` falls back to raw-capacity nodes (actor
+        placement: the new actor would rather queue than park)."""
+        nodes = [n for n in self.cluster.nodes if n.alive
+                 and n.satisfies(spec.resources)]
+        if not nodes:
+            return None
+        steady = [n for n in nodes if n.satisfies_steady(spec.resources)]
+        if not steady and not allow_unsteady:
+            return None
+        best, best_score = None, None
+        for n in steady or nodes:
+            score = self._locality_bytes(spec, n) - 4096.0 * n.load()
+            if extra_score is not None:
+                score += extra_score(n)
+            if best_score is None or score > best_score:
+                best, best_score = n, score
+        return best
+
     def place(self, spec: TaskSpec) -> None:
         with self._locks[hash(spec.task_id) % len(self._locks)]:
-            nodes = [n for n in self.cluster.nodes if n.alive
-                     and n.satisfies(spec.resources)]
-            if not nodes:
-                # no node can ever satisfy: park until topology changes
+            best = self._select_node(spec)
+            if best is None:
+                # no node can run this now or ever (raw capacity too
+                # small, or standing actor grants cover it everywhere):
+                # park until topology changes or a reservation releases
                 self.cluster.park_unschedulable(spec)
                 return
-            best, best_score = None, None
-            for n in nodes:
-                score = (self._locality_bytes(spec, n)
-                         - 4096.0 * n.load())      # bytes-equivalent penalty
-                if best_score is None or score > best_score:
-                    best, best_score = n, score
         # outside the shard lock: transfer + dispatch don't need to
         # serialize with other placement decisions
         self.gcs.log_event("sched_global", spec.task_id,
                            f"node{best.node_id}")
         best.prefetch_args(spec)
         best.local_scheduler.submit_ready(spec)
+
+    def place_actor(self, aspec) -> "Node":
+        """Choose the node an actor lives on: the shared placement policy
+        (ctor ObjectRef args count toward locality), plus a bonus for
+        nodes that can grant the actor's standing footprint right now and
+        a spread penalty on nodes already carrying actor grants (replica
+        pools rely on this). Raises UnschedulableActorError when no live
+        node can ever satisfy the footprint — callers park-and-retry."""
+        def actor_score(n):
+            score = -4096.0 * n.standing_reservation()
+            if n.can_grant_now(aspec.resources):
+                score += 1 << 20   # fits without waiting
+            return score
+
+        with self._locks[hash(aspec.actor_id) % len(self._locks)]:
+            best = self._select_node(aspec, actor_score,
+                                     allow_unsteady=True)
+            if best is None:
+                raise UnschedulableActorError(
+                    f"no live node satisfies actor resources "
+                    f"{aspec.resources!r} for {aspec.class_name}")
+        # reserve at placement time, not when the actor thread spins up:
+        # concurrent placements must see each other's standing grants or
+        # they pile onto one node (the context releases the reservation
+        # when the actor dies). Outside the shard lock — the reservation
+        # respills now-unsatisfiable backlog through this scheduler.
+        best.reserve_for_actor(aspec.resources)
+        self.gcs.log_event("actor_place", aspec.actor_id,
+                           f"node{best.node_id}")
+        return best
 
     def shutdown(self) -> None:
         """Kept for interface compatibility; there is nothing to stop."""

@@ -6,9 +6,12 @@ locality/load placement, lineage-replay on failure) at 1,000-4,096 nodes to
 validate the paper's R1/R2 claims at scale without hardware:
 
   * task throughput vs node count (aggregate millions of tasks/s),
-  * scheduling latency distribution (local vs spilled),
+  * scheduling latency distribution (local vs spilled vs actor lanes),
   * straggler mitigation via wait-style completion-order consumption,
-  * elastic scale-up/down and node failure with task re-execution.
+  * elastic scale-up/down and node failure with task re-execution,
+  * stateful actors: FIFO method lanes pinned to owning nodes, with
+    relocation + call replay on node death (cost `actor_call_s`,
+    calibrated from the runtime's measured method round trip).
 
 Time is virtual; costs are parameters measured from the real runtime's
 microbenchmarks (benchmarks/microbench.py writes them to JSON).
@@ -27,6 +30,7 @@ class SimCosts:
     global_sched_s: float = 50e-6    # spill + global decision + rpc
     worker_overhead_s: float = 15e-6 # dequeue/arg-resolve/result-store
     gcs_op_s: float = 3e-6           # control-plane write
+    actor_call_s: float = 20e-6      # seq issue + log + mailbox dispatch
 
     @classmethod
     def from_microbench(cls, path: str = "BENCH_core.json",
@@ -66,10 +70,22 @@ class SimCosts:
         except (KeyError, TypeError):  # pragma: no cover
             return cls()
         worker = max(e2e - submit - get_done, 1e-6)
+        # actor dispatch overhead: measured method round trip minus the
+        # submit and get legs (mirrors the worker-overhead derivation);
+        # absent from pre-actor runs, fall back to the default
+        actor = cls.actor_call_s
+        if "actor_call" in data:
+            try:
+                actor = max(
+                    data["actor_call"]["p50_us"] * us - submit - get_done,
+                    1e-6)
+            except (KeyError, TypeError):  # pragma: no cover
+                pass
         return cls(local_sched_s=max(submit, 1e-7),
                    global_sched_s=max(submit + 2 * gcs_op, 2e-7),
                    worker_overhead_s=worker,
-                   gcs_op_s=max(gcs_op, 1e-8))
+                   gcs_op_s=max(gcs_op, 1e-8),
+                   actor_call_s=actor)
 
 
 @dataclass
@@ -84,6 +100,22 @@ class SimTask:
     node: int = -1
     spilled: bool = False
     attempts: int = 0
+    actor_id: int = -1               # >= 0: a method call on that actor
+
+
+class SimActor:
+    """One stateful actor in the DES: a FIFO lane pinned to its owning
+    node — method calls bypass placement, queue behind each other, and
+    replay onto a relocated incarnation when the node dies (mirroring the
+    runtime's mailbox + log-replay design)."""
+    __slots__ = ("actor_id", "node_id", "queue", "running", "calls_done")
+
+    def __init__(self, actor_id: int, node_id: int):
+        self.actor_id = actor_id
+        self.node_id = node_id
+        self.queue: List[SimTask] = []
+        self.running: Optional[SimTask] = None
+        self.calls_done = 0
 
 
 class SimNode:
@@ -134,6 +166,7 @@ class ClusterSim:
         self.finished: List[SimTask] = []
         self.sched_latencies: List[Tuple[str, float]] = []
         self.failures_replayed = 0
+        self.actors: List[SimActor] = []
 
     # ------------------------------------------------------------- events
 
@@ -145,6 +178,95 @@ class ClusterSim:
         task.submit_t = at
         self._seq += 1
         heapq.heappush(self._eq, (at, self._seq, "submit", task))
+
+    # ------------------------------------------------------------- actors
+
+    def create_actor(self, node_id: Optional[int] = None) -> int:
+        """Place one actor (least-loaded live node when unspecified) and
+        return its id; calls route to it via `submit_actor_call`."""
+        if node_id is None:
+            live = [n for n in self.nodes if n.alive]
+            node_id = min(live, key=lambda n: n.load()).node_id
+        actor = SimActor(len(self.actors), node_id)
+        self.actors.append(actor)
+        return actor.actor_id
+
+    def submit_actor_call(self, actor_id: int, duration_s: float,
+                          at: float = 0.0) -> SimTask:
+        self._seq += 1
+        task = SimTask(task_id=self._seq, duration_s=duration_s,
+                       submit_node=-1, actor_id=actor_id)
+        self.submit(task, at)
+        return task
+
+    def _actor_dispatch(self, task: SimTask) -> None:
+        actor = self.actors[task.actor_id]
+        if not self.nodes[actor.node_id].alive:
+            self._relocate_actor(actor)
+            if not self.nodes[actor.node_id].alive:
+                # whole cluster down: park; an 'add' event revives it
+                actor.queue.append(task)
+                return
+        # FIFO lane: a queued backlog (e.g. replayed calls awaiting the
+        # relocation pump) always goes ahead of a fresh call
+        if actor.running is None and not actor.queue:
+            self._actor_start(actor, task)
+        else:
+            actor.queue.append(task)
+
+    def _actor_start(self, actor: SimActor, task: SimTask) -> None:
+        task.node = actor.node_id
+        task.attempts += 1
+        actor.running = task
+        self.sched_latencies.append(
+            ("actor", self.now + self.costs.actor_call_s - task.submit_t))
+        task.start_t = self.now + self.costs.actor_call_s
+        self._push(self.costs.actor_call_s + task.duration_s
+                   + self.costs.gcs_op_s, "actor_finish",
+                   (task, task.attempts, actor.actor_id))
+
+    def _actor_finish(self, payload) -> None:
+        task, attempt, actor_id = payload
+        actor = self.actors[actor_id]
+        if attempt != task.attempts or actor.running is not task:
+            return  # stale attempt (actor was relocated mid-call)
+        actor.running = None
+        actor.calls_done += 1
+        if not self.nodes[actor.node_id].alive:
+            # result discarded; the kill path replays the call
+            return
+        task.finish_t = self.now
+        self.finished.append(task)
+        if actor.queue:
+            self._actor_start(actor, actor.queue.pop(0))
+
+    def _relocate_actor(self, actor: SimActor) -> None:
+        """Node death: move the actor to a live node and replay its
+        interrupted/queued calls there in order (log-replay semantics —
+        cost is one global placement decision, charged via the pump
+        event; the queue is preserved so a fresh call cannot jump ahead
+        of replayed ones). With no live node the calls stay parked on
+        the actor until an 'add' event revives it."""
+        victims = ([actor.running] if actor.running is not None else [])
+        victims += actor.queue
+        actor.running = None
+        actor.queue = victims
+        live = [n for n in self.nodes if n.alive]
+        if not live:
+            return
+        actor.node_id = min(live, key=lambda n: n.load()).node_id
+        if victims:
+            self.failures_replayed += len(victims)
+            self._push(self.costs.global_sched_s, "actor_pump",
+                       actor.actor_id)
+
+    def _actor_pump(self, actor_id: int) -> None:
+        """Restart a relocated actor's FIFO lane after the placement
+        delay (finish events keep it draining from there)."""
+        actor = self.actors[actor_id]
+        if (actor.running is None and actor.queue
+                and self.nodes[actor.node_id].alive):
+            self._actor_start(actor, actor.queue.pop(0))
 
     # ------------------------------------------------------------ policies
 
@@ -230,6 +352,10 @@ class ClusterSim:
             self.failures_replayed += 1
             t.submit_node = self.rng.randrange(len(self.nodes))
             self._push(self.costs.global_sched_s, "global_place", t)
+        # resident actors relocate and replay (mailbox + log semantics)
+        for actor in self.actors:
+            if actor.node_id == node_id:
+                self._relocate_actor(actor)
 
     # ---------------------------------------------------------------- run
 
@@ -241,11 +367,18 @@ class ClusterSim:
                 return
             self.now = t
             if kind == "submit":
-                self._local_schedule(payload)
+                if payload.actor_id >= 0:
+                    self._actor_dispatch(payload)
+                else:
+                    self._local_schedule(payload)
             elif kind == "global_place":
                 self._global_place(payload)
             elif kind == "finish":
                 self._finish(payload)
+            elif kind == "actor_finish":
+                self._actor_finish(payload)
+            elif kind == "actor_pump":
+                self._actor_pump(payload)
             elif kind == "kill":
                 self._do_kill(payload)
             elif kind == "add":
@@ -258,6 +391,10 @@ class ClusterSim:
                     for t2 in take:
                         self._push(self.costs.global_sched_s,
                                    "global_place", t2)
+                # revive actors parked on dead nodes (cluster was down)
+                for actor in self.actors:
+                    if not self.nodes[actor.node_id].alive and actor.queue:
+                        self._relocate_actor(actor)
 
     # ------------------------------------------------------------ metrics
 

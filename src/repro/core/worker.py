@@ -6,16 +6,26 @@ scheduler — possibly on another node, triggering a transfer), runs the
 function, stores the returns, and flips the task state in the control
 plane. Workers carry a thread-local "current node" so that tasks creating
 tasks (R3) submit through their node's local scheduler, bottom-up.
+
+Actors get a dedicated execution context (`ActorContext`): one thread per
+actor that constructs the instance (or restores it from a checkpoint) and
+executes mailbox-released method calls strictly in sequence order.
+Execution is mutex-guarded rather than thread-pinned, so a getter blocked
+on a method result can inline-drain ready calls (the same work-stealing
+trick the task path uses) — ordering is preserved because only the mutex
+holder pops from the mailbox, and the mailbox releases in seq order.
 """
 from __future__ import annotations
 
+import copy
 import queue
 import threading
 import traceback
-from typing import TYPE_CHECKING, Optional
+from typing import TYPE_CHECKING, Any, Optional
 
 from repro.core.control_plane import (TASK_DONE, TASK_LOST, TASK_RUNNING,
-                                      TaskSpec)
+                                      ActorSpec, TaskSpec)
+from repro.core.scheduler import ActorMailbox
 
 if TYPE_CHECKING:  # pragma: no cover
     from repro.core.runtime import Node
@@ -93,6 +103,185 @@ def execute_task(node: "Node", spec: TaskSpec, who: str) -> None:
         _worker_ctx.spec = prev_spec
         node.release(spec.resources)
         node.local_scheduler.on_worker_free()
+
+
+class ActorContext(threading.Thread):
+    """Dedicated per-actor execution context.
+
+    Owns the live instance and a seq-ordered `ActorMailbox`. The thread
+    acquires the actor's standing resource grant, constructs the instance
+    (ctor args resolve like task args; or restores `__setstate__` from a
+    checkpoint), then executes released calls. `run_ready` is the single
+    execution entry — actor thread and inline-stealing getters both go
+    through it, serialized by `_exec_lock`, so the instance only ever sees
+    one method at a time, in sequence order. A method that raises stores a
+    TaskError on its return id but does NOT kill the actor."""
+
+    def __init__(self, node: "Node", aspec: ActorSpec, start_seq: int = 0,
+                 checkpoint: Any = None):
+        super().__init__(name=f"actor-{aspec.actor_id}-n{node.node_id}",
+                         daemon=True)
+        self.node = node
+        self.aspec = aspec
+        self.mailbox = ActorMailbox(aspec.actor_id, start_seq)
+        self.instance: Any = None
+        self.ctor_error: Optional[TaskError] = None
+        self.ready = threading.Event()
+        self._exec_lock = threading.Lock()
+        self._checkpoint = checkpoint   # __getstate__ payload, or None
+        self._granted = False
+        self.start()
+
+    # ------------------------------------------------------------ lifecycle
+
+    def run(self) -> None:
+        node = self.node
+        # The standing *reservation* was taken by place_actor (so that
+        # concurrent placements see each other); here we take the grant
+        # out of the avail pool, waiting briefly for transient tasks to
+        # finish. The grant is advisory: a placement race can leave the
+        # node oversubscribed, in which case the actor runs ungranted
+        # rather than stalling its mailbox behind capacity that will
+        # never free (methods ride this grant — their TaskSpecs carry
+        # empty resources).
+        self._granted = (node.try_acquire(self.aspec.resources)
+                         or node.acquire_blocking(self.aspec.resources,
+                                                  timeout=10.0))
+        if not self._granted:  # pragma: no cover - advisory, logged
+            node.gcs.log_event("actor_res_timeout", self.aspec.actor_id,
+                               f"node{node.node_id}")
+        try:
+            self._construct()
+        finally:
+            self.ready.set()
+        while self.mailbox.wait_ready():
+            # blocking acquire: if a stealing getter is mid-drain, sleep
+            # on the mutex instead of spinning against it
+            self.run_ready("actor", block=True)
+        node.unreserve_for_actor(self.aspec.resources)  # pairs place_actor
+        if self._granted:
+            node.release(self.aspec.resources)
+
+    def _construct(self) -> None:
+        node, aspec, gcs = self.node, self.aspec, self.node.gcs
+        prev_node = getattr(_worker_ctx, "node", None)
+        _worker_ctx.node = node
+        try:
+            cls = gcs.function(aspec.class_name)
+            if self._checkpoint is not None:
+                inst = cls.__new__(cls)
+                inst.__setstate__(copy.deepcopy(self._checkpoint))
+                gcs.log_event("actor_restore", aspec.actor_id,
+                              f"node{node.node_id}")
+            else:
+                args = [node.resolve(a) for a in aspec.args]
+                kwargs = {k: node.resolve(v)
+                          for k, v in aspec.kwargs.items()}
+                inst = cls(*args, **kwargs)
+            self.instance = inst
+            gcs.log_event("actor_ready", aspec.actor_id,
+                          f"node{node.node_id}")
+        except Exception:  # noqa: BLE001
+            self.ctor_error = TaskError(
+                f"actor {aspec.actor_id} ({aspec.class_name}) "
+                f"constructor failed:\n" + traceback.format_exc())
+            gcs.log_event("actor_error", aspec.actor_id,
+                          f"node{node.node_id}", ctor=True)
+        finally:
+            _worker_ctx.node = prev_node
+
+    # ------------------------------------------------------------ execution
+
+    def run_ready(self, who: str, block: bool = False) -> int:
+        """Execute every in-order, already-delivered method call; returns
+        how many ran. Stealers use the non-blocking form: if another
+        thread holds the execution mutex they back off (woken by the
+        completion notify like any other waiter); the actor thread blocks
+        on the mutex so it never spins against an inline drain."""
+        if not self.ready.is_set():
+            return 0
+        if not self._exec_lock.acquire(blocking=block):
+            return 0
+        try:
+            n = 0
+            while True:
+                spec = self.mailbox.pop_next()
+                if spec is None:
+                    return n
+                self._execute(spec, who)
+                n += 1
+        finally:
+            self._exec_lock.release()
+
+    def _execute(self, spec: TaskSpec, who: str) -> None:
+        node, gcs = self.node, self.node.gcs
+        prev_node = getattr(_worker_ctx, "node", None)
+        prev_spec = getattr(_worker_ctx, "spec", None)
+        _worker_ctx.node = node
+        _worker_ctx.spec = spec
+        try:
+            gcs.set_task_state(spec.task_id, TASK_RUNNING)
+            gcs.log_event("actor_start", spec.task_id,
+                          f"node{node.node_id}/{who}")
+            if self.ctor_error is not None:
+                raise self.ctor_error
+            method = getattr(self.instance, spec.actor_method)
+            args = [node.resolve(a) for a in spec.args]
+            kwargs = {k: node.resolve(v) for k, v in spec.kwargs.items()}
+            out = method(*args, **kwargs)
+            if node.alive:
+                rets = (out,) if len(spec.return_ids) == 1 else tuple(out)
+                for rid, val in zip(spec.return_ids, rets):
+                    node.store.put(rid, val)
+                gcs.set_task_state(spec.task_id, TASK_DONE)
+                gcs.log_event("actor_finish", spec.task_id,
+                              f"node{node.node_id}/{who}")
+                self._maybe_checkpoint(spec.actor_seq + 1)
+            else:
+                gcs.set_task_state(spec.task_id, TASK_LOST)
+                for rid in spec.return_ids:
+                    gcs.notify_lost(rid)
+        except Exception:  # noqa: BLE001
+            if node.alive:
+                err = TaskError(
+                    f"actor method {spec.task_id} ({spec.func_name}) "
+                    f"failed:\n" + traceback.format_exc())
+                for rid in spec.return_ids:
+                    node.store.put(rid, err)
+                gcs.set_task_state(spec.task_id, TASK_DONE)
+                gcs.log_event("actor_method_error", spec.task_id,
+                              f"node{node.node_id}/{who}")
+            else:
+                gcs.set_task_state(spec.task_id, TASK_LOST)
+                gcs.log_event("actor_method_error", spec.task_id,
+                              f"node{node.node_id}/{who}", lost=True)
+                for rid in spec.return_ids:
+                    gcs.notify_lost(rid)
+        finally:
+            _worker_ctx.node = prev_node
+            _worker_ctx.spec = prev_spec
+
+    def _maybe_checkpoint(self, next_seq: int) -> None:
+        """Persist `__getstate__` to the control plane every
+        `checkpoint_interval` completed calls, bounding restart replay to
+        the log tail. Opt-in: interval 0 (the default) disables it."""
+        k = self.aspec.checkpoint_interval
+        if not k or next_seq % k or self.instance is None:
+            return
+        getstate = getattr(type(self.instance), "__getstate__", None)
+        if getstate is None or getstate is getattr(object, "__getstate__",
+                                                   None):
+            return
+        try:
+            state = copy.deepcopy(self.instance.__getstate__())
+        except Exception:  # noqa: BLE001 - checkpoint is best-effort
+            self.node.gcs.log_event("actor_ckpt_error", self.aspec.actor_id,
+                                    f"node{self.node.node_id}")
+            return
+        self.node.gcs.set_actor_checkpoint(self.aspec.actor_id,
+                                           next_seq, state)
+        self.node.gcs.log_event("actor_ckpt", self.aspec.actor_id,
+                                f"node{self.node.node_id}", seq=next_seq)
 
 
 class Worker(threading.Thread):

@@ -1,1 +1,2 @@
-from repro.serving.engine import Request, Response, ServingEngine  # noqa: F401
+from repro.serving.engine import (ReplicaPool, Request, Response,  # noqa: F401
+                                  ServingEngine, ServingReplica)

@@ -10,16 +10,24 @@ riding the batch until the wave drains; new requests start the next wave.
 
 This is iteration-level batching (Orca-style) with aligned positions; a
 vLLM-style paged KV cache with per-lane clocks is noted as future work in
-DESIGN.md. The request intake/response path runs as repro.core tasks in
-examples/serve_llm.py, giving the serving loop the paper's R1/R2
-properties (async admission, wait-driven completion).
+DESIGN.md.
+
+Scale-out: `ReplicaPool` runs N `ServingReplica` *actors* (stateful
+`@remote` classes) on the core runtime — each replica holds its own
+engine (model state never round-trips through the object store), waves
+dispatch to the replica with the fewest outstanding waves (wait-based
+straggler routing, R1), and a replica lost to node failure is restarted
+and its in-flight waves replayed by the actor runtime (R6). The request
+intake/response path in examples/serve_llm.py rides the same futures +
+wait machinery, giving the serving loop the paper's R1/R2 properties
+(async admission, wait-driven completion).
 """
 from __future__ import annotations
 
 import time
 from collections import defaultdict
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Callable, Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +49,21 @@ class Response:
     request_id: int
     tokens: List[int]
     latency_s: float
+
+
+def length_aligned_waves(requests: List["Request"], max_wave: int
+                         ) -> List[List["Request"]]:
+    """Group requests by prompt length and chunk into waves — the batch
+    shape both the single engine and the replica pool dispatch on (equal
+    lengths per wave keep prefill/decode a single SPMD program)."""
+    by_len: Dict[int, List[Request]] = defaultdict(list)
+    for r in requests:
+        by_len[len(r.prompt)].append(r)
+    waves = []
+    for _, group in sorted(by_len.items()):
+        for i in range(0, len(group), max_wave):
+            waves.append(group[i:i + max_wave])
+    return waves
 
 
 class ServingEngine:
@@ -77,17 +100,102 @@ class ServingEngine:
 
     def serve(self, requests: List[Request], max_wave: int = 8
               ) -> List[Response]:
-        """Group by prompt length, run length-aligned waves."""
-        by_len: Dict[int, List[Request]] = defaultdict(list)
-        for r in requests:
-            by_len[len(r.prompt)].append(r)
+        """Run length-aligned waves sequentially on this engine."""
         responses: List[Response] = []
-        for _, group in sorted(by_len.items()):
-            for i in range(0, len(group), max_wave):
-                responses.extend(self._run_wave(group[i:i + max_wave]))
+        for wave in length_aligned_waves(requests, max_wave):
+            responses.extend(self._run_wave(wave))
         return responses
 
     def generate(self, prompt: np.ndarray, max_new_tokens: int = 16
                  ) -> List[int]:
         r = Request(0, np.asarray(prompt, np.int32), max_new_tokens)
         return self._run_wave([r])[0].tokens
+
+
+class ServingReplica:
+    """Actor body: one engine replica. The factory runs inside the actor's
+    constructor, so model/params/jit caches live on the owning node and a
+    restarted incarnation rebuilds them from scratch (engine state is
+    derivable; request state is replayed by the actor runtime)."""
+
+    def __init__(self, engine_factory: Callable[[], "ServingEngine"]):
+        self.engine = engine_factory()
+        self.waves_served = 0
+        self.requests_served = 0
+
+    def serve_wave(self, requests) -> List[Response]:
+        """Run one pre-chunked, length-aligned wave as a single batch —
+        the pool already applied its max_wave, so don't re-chunk at the
+        engine's default."""
+        self.waves_served += 1
+        self.requests_served += len(requests)
+        return self.engine.serve(list(requests),
+                                 max_wave=max(len(requests), 1))
+
+    def stats(self) -> Dict[str, int]:
+        return {"waves_served": self.waves_served,
+                "requests_served": self.requests_served}
+
+
+class ReplicaPool:
+    """Actor-backed serving tier: N `ServingReplica` actors placed by the
+    global scheduler (spread across nodes by the standing-reservation
+    penalty), with wait-based straggler routing — each wave goes to the
+    replica with the fewest unfinished waves, measured by reaping
+    completed futures with a zero-timeout `wait` at dispatch time. Wave
+    futures are ordinary ObjectRefs: compose with get/wait downstream."""
+
+    def __init__(self, engine_factory: Callable[[], "ServingEngine"],
+                 num_replicas: int = 2,
+                 resources: Dict[str, float] = None):
+        from repro import core
+        self._core = core
+        actor_cls = core.remote(ServingReplica)
+        if resources is not None:
+            actor_cls = actor_cls.options(resources=resources)
+        self.replicas = [actor_cls.submit(engine_factory)
+                         for _ in range(num_replicas)]
+        self._inflight: Dict[int, List] = {
+            i: [] for i in range(num_replicas)}
+
+    def submit_wave(self, requests: List[Request]):
+        """Dispatch one wave; returns the ObjectRef of its responses."""
+        core = self._core
+        for i, refs in self._inflight.items():
+            if refs:
+                _, pending = core.wait(refs, num_returns=len(refs),
+                                       timeout=0)
+                self._inflight[i] = pending
+        idx = min(self._inflight, key=lambda i: len(self._inflight[i]))
+        ref = self.replicas[idx].serve_wave.submit(tuple(requests))
+        self._inflight[idx].append(ref)
+        return ref
+
+    def serve(self, requests: List[Request], max_wave: int = 8,
+              timeout: float = 300.0) -> List[Response]:
+        """Group by prompt length, fan waves across the replica set, and
+        collect responses in completion order (stragglers never gate the
+        batch). Raises TimeoutError if the whole batch has not drained
+        within `timeout` — a permanently lost wave must surface, not
+        spin."""
+        wave_refs = [self.submit_wave(wave)
+                     for wave in length_aligned_waves(requests, max_wave)]
+        responses: List[Response] = []
+        pending = wave_refs
+        deadline = time.perf_counter() + timeout
+        while pending:
+            remaining = deadline - time.perf_counter()
+            if remaining <= 0:
+                raise TimeoutError(
+                    f"{len(pending)} serving wave(s) incomplete after "
+                    f"{timeout}s")
+            done, pending = self._core.wait(
+                pending, num_returns=1, timeout=min(remaining, 30.0))
+            for ref in done:
+                responses.extend(self._core.get(ref))
+        return responses
+
+    def stats(self) -> List[Dict[str, int]]:
+        # submit all first so the N round trips overlap
+        refs = [r.stats.submit() for r in self.replicas]
+        return [self._core.get(ref) for ref in refs]

@@ -202,3 +202,40 @@ def test_get_list_uses_shared_deadline(cluster):
     assert elapsed < 0.9, (
         f"get(list) took {elapsed:.2f}s — timeout applied per element "
         "instead of one shared deadline")
+
+
+# ------------------------------------------------ put() placement (PR 3)
+
+def test_driver_put_round_robins_across_nodes(cluster):
+    """Driver puts must spread like driver submits, not pin every object
+    on live_nodes()[0]."""
+    nodes = set()
+    for _ in range(8):
+        ref = core.put(0)
+        nodes |= set(cluster.gcs.locations(ref.id))
+    assert len(nodes) > 1, "every driver put landed on one node"
+
+
+def test_worker_put_stays_local(cluster):
+    @core.remote
+    def putter():
+        from repro.core.worker import current_node
+        return current_node().node_id, core.put("x")
+
+    nid, ref = core.get(putter.submit())
+    assert set(cluster.gcs.locations(ref.id)) == {nid}
+
+
+# --------------------------------------- options() falsy merge (PR 3)
+
+def test_options_respects_falsy_overrides(cluster):
+    @core.remote
+    def f():
+        return 1
+
+    assert f.options(resources={}).resources == {}, (
+        "resources={} was silently replaced by the old value")
+    # omitted fields still inherit
+    g = f.options(num_returns=2)
+    assert g.resources == f.resources and g.num_returns == 2
+    assert f.options().num_returns == 1
