@@ -4,14 +4,15 @@ Paper targets (their prototype): submit ~35us, get-after-done ~110us,
 empty-task e2e ~290us local / ~1ms remote. We measure those four
 quantities on our runtime plus the node-local get fast path, wait() wakeup
 latency, raw control-plane op latency, the stateful-actor method-call
-round trip, and task throughput.
+round trip, task throughput, and a bounded-store churn loop (steady-state
+resident bytes + GC reclaim latency under sustained put→get→drop).
 
 Results land in two places:
 
   * ``benchmarks/results/microbench.json`` — this run only (feeds the DES
     simulator's cost model via ``SimCosts.from_microbench``);
   * ``BENCH_core.json`` at the repo root — the tracked perf trajectory.
-    Each invocation upserts its ``--run-name`` entry (default ``pr3``) and
+    Each invocation upserts its ``--run-name`` entry (default ``pr4``) and
     preserves the other entries (notably ``seed``, the pre-PR1 baseline),
     then recomputes speedups vs the seed. Regenerate with:
 
@@ -150,6 +151,54 @@ def run(n: int = 2000) -> dict:
                                max(n // 4, 50))
 
     core.shutdown()
+
+    # 10. churn: sustained put→get→drop loop under a bounded store —
+    #     the memory-governed data plane's steady-state check. Reports
+    #     resident bytes (must plateau: dropped refs are reclaimed
+    #     cluster-wide by the refcount GC) and the GC reclaim latency
+    #     (handle drop → object discarded on every node). Fresh
+    #     small-capacity cluster so the unbounded sections above are
+    #     unaffected.
+    cluster = core.init(num_nodes=2, workers_per_node=2,
+                        spill_threshold=4096,
+                        store_capacity_bytes=256 * 1024)
+    mm = cluster.memory
+    payload_bytes = 8192
+    window_len = 8            # live refs kept in flight (steady state)
+    m = max(n // 2, 100)
+    resident: list = []
+    reclaim_ts: list = []
+    timeouts = 0
+    window: list = []
+    for _ in range(m):
+        ref = core.put(bytes(payload_bytes))
+        core.get(ref)
+        window.append(ref)
+        if len(window) > window_len:
+            old = window.pop(0)
+            oid = old.id
+            t0 = time.perf_counter()
+            del old       # last handle: GC reclaims cluster-wide
+            if mm.wait_reclaimed(oid, timeout=2.0):
+                reclaim_ts.append(time.perf_counter() - t0)
+            else:  # pragma: no cover - would indicate a GC bug
+                timeouts += 1
+        resident.append(sum(nd.store.used_bytes for nd in cluster.nodes))
+    core.shutdown()
+    half = m // 2
+    early = statistics.fmean(resident[:max(half // 2, 1)])
+    late = statistics.fmean(resident[half:])
+    out["churn"] = {
+        "iterations": m,
+        "payload_bytes": payload_bytes,
+        "resident_steady_bytes": statistics.median(resident[half:]),
+        "resident_max_bytes": max(resident),
+        # late-window / early-window resident ratio: ~1.0 when the GC
+        # holds steady state, >> 1 when the store leaks
+        "resident_growth": (late / early) if early else 1.0,
+        "reclaim_timeouts": timeouts,
+        "reclaim_us": _stats(reclaim_ts) if reclaim_ts else {},
+    }
     out["paper_targets_us"] = PAPER_TARGETS_US
     return out
 
@@ -189,13 +238,18 @@ def update_bench_file(measurements: dict, run_name: str = "pr1",
 
 def check_regression(measurements: dict, ref_run: str,
                      path: Path = BENCH_FILE,
-                     keys=("e2e_remote", "wait_one", "actor_call"),
+                     keys=("e2e_remote", "wait_one", "actor_call",
+                           "churn"),
                      slack: float = None) -> bool:
-    """CI guard: the hop-free remote path, the wait notify path, and the
-    actor method-call path must not regress vs the committed
-    BENCH_core.json record. Keys absent from the reference run (e.g.
-    actor_call before PR 3) are skipped. The slack factor absorbs
-    CI-machine jitter (override via BENCH_REGRESSION_SLACK)."""
+    """CI guard: the hop-free remote path, the wait notify path, the
+    actor method-call path, and the memory-governance churn loop must
+    not regress vs the committed BENCH_core.json record. Keys absent
+    from the reference run (e.g. actor_call before PR 3, churn before
+    PR 4) are skipped. The churn check additionally fails — regardless
+    of the reference — when steady-state resident bytes grow unbounded
+    across iterations (a data-plane leak) or any reclaim timed out. The
+    slack factor absorbs CI-machine jitter (override via
+    BENCH_REGRESSION_SLACK)."""
     if slack is None:
         slack = float(os.environ.get("BENCH_REGRESSION_SLACK", "3.0"))
     try:
@@ -209,6 +263,29 @@ def check_regression(measurements: dict, ref_run: str,
         return True
     ok = True
     for key in keys:
+        if key == "churn":
+            cur_ch = measurements.get("churn")
+            if not cur_ch:
+                continue
+            growth = cur_ch.get("resident_growth", 1.0)
+            stable = growth <= 1.5 and not cur_ch.get("reclaim_timeouts")
+            print(f"bench-check churn: resident growth {growth:.2f}x "
+                  f"(limit 1.50x), reclaim timeouts "
+                  f"{cur_ch.get('reclaim_timeouts', 0)} "
+                  f"{'ok' if stable else 'LEAK'}")
+            ok = ok and stable
+            ref_ch = ref.get("churn")
+            if ref_ch and ref_ch.get("reclaim_us") \
+                    and cur_ch.get("reclaim_us"):
+                cur = cur_ch["reclaim_us"]["p50_us"]
+                committed = ref_ch["reclaim_us"]["p50_us"]
+                limit = committed * slack
+                good = cur <= limit
+                print(f"bench-check churn.reclaim: p50 {cur:.1f}us vs "
+                      f"committed {committed:.1f}us (limit {limit:.1f}us) "
+                      f"{'ok' if good else 'REGRESSION'}")
+                ok = ok and good
+            continue
         if key not in ref:
             print(f"bench-check {key}: not in reference run "
                   f"{ref_run!r}; skipping")
@@ -244,6 +321,13 @@ def rows():
            "stateful actor method round trip")
     yield ("microbench.throughput_tasks_s", out["throughput_tasks_per_s"],
            "single-process")
+    if out.get("churn"):
+        yield ("microbench.churn_resident_kb",
+               out["churn"]["resident_steady_bytes"] / 1024,
+               "bounded-store steady state")
+        yield ("microbench.churn_reclaim_us",
+               out["churn"]["reclaim_us"].get("p50_us", 0.0),
+               "GC reclaim latency")
 
 
 def main() -> None:
@@ -253,7 +337,7 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="quick CI run: small n, does not touch "
                          "BENCH_core.json")
-    ap.add_argument("--run-name", default="pr3",
+    ap.add_argument("--run-name", default="pr4",
                     help="entry name in BENCH_core.json")
     ap.add_argument("--out", default=None,
                     help="override BENCH_core.json path")

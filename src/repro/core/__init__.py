@@ -1,14 +1,17 @@
 """The paper's primary contribution: a real-time dataflow execution
 framework — futures + dynamic task graphs + stateful actors (api),
 sharded control plane (control_plane), hybrid local/global scheduling
-with per-actor FIFO mailbox lanes (scheduler), in-memory object store
-(object_store), lineage-replay fault tolerance for tasks and actors
-(runtime), plus baseline executors (executors) and a cluster-scale
-discrete-event simulator (simulator)."""
+with per-actor FIFO mailbox lanes (scheduler), bounded garbage-collected
+in-memory object stores (object_store + memory: distributed ref
+counting, LRU evict-and-reconstruct), lineage-replay fault tolerance
+for tasks and actors (runtime), plus baseline executors (executors) and
+a cluster-scale discrete-event simulator (simulator)."""
 from repro.core.api import (ActorClass, ActorHandle, ObjectRef,  # noqa: F401
-                            RemoteFunction, attach, get, init, put, remote,
-                            shutdown, wait)
+                            RemoteFunction, attach, free, get, init, put,
+                            remote, shutdown, wait)
 from repro.core.control_plane import (ActorSpec, ControlPlane,  # noqa: F401
                                       TaskSpec)
+from repro.core.memory import (MemoryManager,  # noqa: F401
+                               ObjectReclaimedError, sizeof)
 from repro.core.runtime import Cluster, Node  # noqa: F401
 from repro.core.worker import ActorContext, TaskError  # noqa: F401

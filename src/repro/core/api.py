@@ -19,6 +19,25 @@
      failure by replaying the logged method sequence (or restoring an
      opt-in `__getstate__` checkpoint and replaying the tail) — the
      stateful analogue of lineage reconstruction (R6).
+  7. Memory & GC — object stores are bounded, accounted LRU caches
+     governed by distributed reference counting. Ownership rules:
+       * a handle returned by ``submit()`` / ``put()`` **owns** one
+         reference; dropping it (``del`` / scope exit) releases the
+         count, and when the count hits zero with no pending task
+         depending on the object it is reclaimed on every node;
+       * refs passed as task arguments are **borrows** — the task table
+         holds non-owning copies, and the object is pinned only until
+         the consuming task completes;
+       * a manually rebuilt ``ObjectRef(id)`` is a borrow: it neither
+         counts nor keeps the object alive;
+       * ``free(refs)`` reclaims eagerly without waiting for GC.
+     Under memory pressure stores evict least-recently-used objects
+     (preferring secondary replicas; in-flight task arguments are
+     pinned); an evicted task output is transparently recomputed via
+     lineage on the next fetch, while a reclaimed object with no
+     lineage surfaces as a prompt ``ObjectReclaimedError``. Tasks can
+     hint their output footprint with ``resources={"mem": nbytes}`` so
+     placement steers big outputs toward nodes with free store bytes.
 
 Usage:
     cluster = init(num_nodes=4, workers_per_node=2)
@@ -78,10 +97,53 @@ def _cluster() -> Cluster:
 
 @dataclass(frozen=True)
 class ObjectRef:
+    """Future handle. Instances returned by ``submit()``/``put()`` are
+    *owning* (the MemoryManager stamped itself on them at adoption);
+    everything else — manual ``ObjectRef(id)`` construction, copies,
+    refs embedded in task specs — is a borrow that neither counts nor
+    keeps the object alive."""
     id: str
 
     def __repr__(self):
         return f"ObjectRef({self.id})"
+
+    def __del__(self):
+        # owning handles release their count; deferred via the manager's
+        # reclaim queue because __del__ can fire on any thread while
+        # arbitrary locks are held. Borrows have no _owner stamp.
+        try:
+            owner = self.__dict__.get("_owner")
+            if owner is not None:
+                owner.release(self.id)
+        except Exception:  # noqa: BLE001 - interpreter teardown
+            pass
+
+    def __copy__(self):
+        return ObjectRef(self.id)       # copies are borrows
+
+    def __deepcopy__(self, _memo):
+        return ObjectRef(self.id)       # copies are borrows
+
+
+def _borrow(arg):
+    """Non-owning copy of an ObjectRef argument (refs one level inside
+    plain list/tuple included). Task specs live in the task table for
+    the cluster's lifetime, so an owning handle captured there would pin
+    the object's refcount above zero forever."""
+    if isinstance(arg, ObjectRef):
+        return ObjectRef(arg.id)
+    if type(arg) in (list, tuple) and any(
+            isinstance(e, ObjectRef) for e in arg):
+        return type(arg)(ObjectRef(e.id) if isinstance(e, ObjectRef) else e
+                         for e in arg)
+    return arg
+
+
+def _borrowed_args(args, kwargs):
+    if not args and not kwargs:      # argless submit: zero allocations
+        return args, kwargs
+    return (tuple(_borrow(a) for a in args),
+            {k: _borrow(v) for k, v in kwargs.items()})
 
 
 def _check_no_deep_refs(args, kwargs) -> None:
@@ -127,6 +189,10 @@ class RemoteFunction:
         self.name = f"{fn.__module__}.{fn.__qualname__}"
         self.num_returns = num_returns
         self.resources = {"cpu": 1.0} if resources is None else dict(resources)
+        # "mem" is a placement hint (expected output bytes scored
+        # against store free space), not a capacity resource — split it
+        # out so satisfies()/try_acquire() never see it
+        self.mem_bytes = int(self.resources.pop("mem", 0))
         self._registered_on: Optional[int] = None
         functools.update_wrapper(self, fn)
 
@@ -139,6 +205,8 @@ class RemoteFunction:
             self._fn,
             self.num_returns if num_returns is None else num_returns,
             self.resources if resources is None else resources)
+        if resources is None:  # inherited resources keep their mem hint
+            rf.mem_bytes = self.mem_bytes
         return rf
 
     def submit(self, *args, **kwargs):
@@ -166,13 +234,22 @@ class RemoteFunction:
             submitter = entry.node_id
         else:
             entry = node
-        spec = TaskSpec(task_id=task_id, func_name=self.name, args=args,
-                        kwargs=kwargs, return_ids=ret_ids,
-                        resources=self.resources, submitter_node=submitter)
+        # adopt the returned handles BEFORE the task can run: a worker
+        # finishing first would otherwise see refcount 0 and hand the
+        # fresh output straight to the reclaimer
+        refs = tuple(ObjectRef(r) for r in ret_ids)
+        mm = cluster.memory
+        for r in refs:
+            mm.adopt(r)
+        bargs, bkwargs = _borrowed_args(args, kwargs)
+        spec = TaskSpec(task_id=task_id, func_name=self.name, args=bargs,
+                        kwargs=bkwargs, return_ids=ret_ids,
+                        resources=self.resources, submitter_node=submitter,
+                        mem_bytes=self.mem_bytes)
         gcs.register_task(spec)
+        mm.pin_task(task_id, spec)  # args stay resident until DONE
         gcs.log_event("submit", task_id, f"node{submitter}")
         entry.local_scheduler.submit(spec)
-        refs = tuple(ObjectRef(r) for r in ret_ids)
         return refs[0] if self.num_returns == 1 else refs
 
     def __call__(self, *args, **kwargs):
@@ -219,6 +296,7 @@ class ActorClass:
         node = current_node()
         submitter = node.node_id if node is not None else 0
         from repro.core.control_plane import ActorSpec
+        args, kwargs = _borrowed_args(args, kwargs)
         aspec = ActorSpec(actor_id=actor_id, class_name=self.name,
                           args=args, kwargs=kwargs,
                           resources=self.resources,
@@ -256,20 +334,24 @@ class ActorMethod:
         node = current_node()
         submitter = node.node_id if node is not None else 0
         seq = gcs.next_actor_seq(h.actor_id)
+        ref = ObjectRef(ret_id)
+        cluster.memory.adopt(ref)   # before the method can complete
+        bargs, bkwargs = _borrowed_args(args, kwargs)
         from repro.core.control_plane import TaskSpec
         spec = TaskSpec(task_id=task_id,
                         func_name=f"{h.class_name}.{self._name}",
-                        args=args, kwargs=kwargs, return_ids=(ret_id,),
+                        args=bargs, kwargs=bkwargs, return_ids=(ret_id,),
                         resources={},  # rides the actor's standing grant
                         submitter_node=submitter,
                         actor_id=h.actor_id, actor_method=self._name,
                         actor_seq=seq)
         gcs.register_task(spec)
+        cluster.memory.pin_task(task_id, spec)
         gcs.log_actor_call(h.actor_id, seq, task_id)
         gcs.log_event("submit_actor", task_id, f"node{submitter}",
                       actor=h.actor_id, seq=seq)
         cluster.submit_actor_task(spec)
-        return ObjectRef(ret_id)
+        return ref
 
 
 class ActorHandle:
@@ -321,8 +403,30 @@ def put(value: Any) -> ObjectRef:
     if node is None:
         live = cluster.live_nodes()
         node = live[int(oid[1:]) % len(live)]
-    node.store.put(oid, value)
-    return ObjectRef(oid)
+    ref = ObjectRef(oid)
+    cluster.memory.adopt(ref)   # the returned handle owns the object
+    if not node.store.put(oid, value):
+        # the chosen store was wiped by a concurrent node kill (put on a
+        # wiped store refuses, so the data never landed): place the
+        # object on any surviving node rather than returning a handle
+        # nothing can ever fetch
+        if not any(n.store.put(oid, value) for n in cluster.live_nodes()):
+            raise RuntimeError(
+                "put() failed: no live node accepted the object")
+    return ref
+
+
+def free(refs) -> None:
+    """Eagerly reclaim objects without waiting for handle GC: drops the
+    reference count to zero, marks the ids freed, and discards every
+    unpinned copy cluster-wide (a copy pinned by a still-pending task is
+    reclaimed when that task completes). A later `get` on a freed object
+    with no lineage raises ObjectReclaimedError promptly; `wait` counts
+    freed futures as done. Accepts one ref or a sequence."""
+    cluster = _cluster()
+    if isinstance(refs, ObjectRef):
+        refs = [refs]
+    cluster.memory.free([r.id for r in refs])
 
 
 def get(ref, timeout: float = 60.0):
@@ -380,7 +484,11 @@ def wait(refs: Sequence[ObjectRef], num_returns: int = 1,
     gcs = cluster.gcs
     unique_ids = {r.id for r in refs}
     num_returns = min(num_returns, len(unique_ids))
-    done_set = {i for i in unique_ids if gcs.locations(i)}
+    # freed (explicitly reclaimed) futures count as done: nothing will
+    # ever add a location for them, and a waiter must not hang on a
+    # future its own pipeline already consumed and freed
+    done_set = {i for i in unique_ids
+                if gcs.locations(i) or gcs.is_freed(i)}
 
     def partition(snapshot):
         # partition against a frozen snapshot: a completion landing
@@ -400,7 +508,7 @@ def wait(refs: Sequence[ObjectRef], num_returns: int = 1,
         # re-check after registering: a completion that landed in the gap
         # fired no notify, so fold it in by hand
         for oid in pending_ids:
-            if gcs.locations(oid):
+            if gcs.locations(oid) or gcs.is_freed(oid):
                 waiter.complete(oid)
         deadline = None if timeout is None else time.perf_counter() + timeout
         with waiter.cond:

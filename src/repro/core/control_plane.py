@@ -64,6 +64,10 @@ class TaskSpec:
     actor_id: Optional[str] = None
     actor_method: Optional[str] = None
     actor_seq: int = -1
+    # memory-pressure placement hint (resources={"mem": nbytes} at
+    # submit): expected output footprint, scored against store free
+    # bytes — NOT a capacity resource (never acquired/released)
+    mem_bytes: int = 0
 
 
 @dataclass
@@ -266,6 +270,55 @@ class ControlPlane:
 
     def producing_task(self, obj_id: str) -> Optional[str]:
         return self.get(f"lineage:{obj_id}")
+
+    # -------------------------------------------- reference counts / GC
+    # Distributed reference counting lives in the object table like
+    # locations do: owning ObjectRef handles hold one count each
+    # (adopted at submit/put, released by __del__ or api.free); the
+    # MemoryManager reclaims an object cluster-wide when its count hits
+    # zero and no pending task pins it. `freed` records reclaimed ids so
+    # a late fetch with no lineage to replay fails promptly.
+
+    # refcnt keys have no subscribers by design (the reclaimer polls
+    # counts it was handed, never watches them), so these specialized
+    # read-modify-writes skip update()'s closure + callback collection —
+    # incr_ref sits on the submit hot path.
+
+    def incr_ref(self, obj_id: str) -> int:
+        key = f"refcnt:{obj_id}"
+        sh = self._shard(key)
+        with sh.lock:
+            v = (sh.data.get(key) or 0) + 1
+            sh.data[key] = v
+        return v
+
+    def decr_ref(self, obj_id: str) -> int:
+        key = f"refcnt:{obj_id}"
+        sh = self._shard(key)
+        with sh.lock:
+            v = (sh.data.get(key) or 0) - 1
+            sh.data[key] = v
+        return v
+
+    def refcount(self, obj_id: str) -> int:
+        return self.get(f"refcnt:{obj_id}") or 0
+
+    def drop_ref_key(self, obj_id: str) -> None:
+        """Prune a reclaimed object's count entry: the count can never
+        rise again (freed ids are never re-adopted), and a long-running
+        churn loop must not accrete one key per object ever created.
+        The `freed` tombstone stays — it is what makes late fetches
+        fail promptly instead of hanging."""
+        key = f"refcnt:{obj_id}"
+        sh = self._shard(key)
+        with sh.lock:
+            sh.data.pop(key, None)
+
+    def mark_freed(self, obj_id: str) -> None:
+        self.put(f"freed:{obj_id}", True)
+
+    def is_freed(self, obj_id: str) -> bool:
+        return bool(self.get(f"freed:{obj_id}"))
 
     # ------------------------------------------ completion-notify channel
 

@@ -7,14 +7,32 @@ plasma-over-network in the paper's architecture). Locations are tracked in
 the control plane's object table so schedulers can place tasks near their
 inputs (locality-aware scheduling) and so lineage replay knows what was
 lost when a node dies.
+
+Memory governance: the store is a *bounded, accounted LRU cache*. Every
+put records a ``sizeof`` footprint; when `capacity_bytes` is set and an
+insert would exceed it, least-recently-used objects are evicted in
+priority order (dead → secondary replica → reconstructible last copy —
+the MemoryManager classifies; pinned in-flight arguments and referenced
+last copies with no lineage are never evicted, so capacity is a soft cap
+under pure-protected contents). An evicted last copy of a referenced
+object is repaired transparently by lineage replay on the next fetch.
+
+A wiped store (node death) refuses all further puts — a transfer racing
+the wipe must not resurrect data or locations on a dead node.
 """
 from __future__ import annotations
 
+import itertools
 import threading
 import time
-from typing import Any, Dict, Optional
+from collections import OrderedDict
+from typing import TYPE_CHECKING, Any, Dict, List, Optional, Tuple
 
 from repro.core.control_plane import ControlPlane
+from repro.core.memory import sizeof
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.memory import MemoryManager
 
 
 class _Missing:
@@ -27,20 +45,137 @@ class _Missing:
 #: Sentinel returned by `get_if_present` when the object is not resident.
 MISSING = _Missing()
 
+# Bounds the classification scan one eviction performs (each candidate
+# costs a few control-plane reads); past this window the put proceeds
+# over capacity rather than stalling the hot path on a full-store scan.
+_MAX_EVICT_SCAN = 256
+
 
 class ObjectStore:
     def __init__(self, node_id: int, gcs: ControlPlane,
-                 transfer_latency_s: float = 0.0):
+                 transfer_latency_s: float = 0.0,
+                 capacity_bytes: Optional[int] = None,
+                 memory: Optional["MemoryManager"] = None):
         self.node_id = node_id
         self.gcs = gcs
         self.transfer_latency_s = transfer_latency_s
+        self.capacity_bytes = capacity_bytes
+        self.memory = memory
         self._lock = threading.Lock()
-        self._data: Dict[str, Any] = {}
+        # insertion/touch order IS the LRU order: oldest first
+        self._data: "OrderedDict[str, Any]" = OrderedDict()
+        self._sizes: Dict[str, int] = {}
+        self._used = 0
+        self._wiped = False
+        self.evictions = 0
 
-    def put(self, obj_id: str, value: Any) -> None:
+    # ------------------------------------------------------------ accounting
+
+    @property
+    def used_bytes(self) -> int:
         with self._lock:
+            return self._used
+
+    def free_bytes(self) -> float:
+        """Bytes until capacity; unbounded stores report +inf."""
+        if self.capacity_bytes is None:
+            return float("inf")
+        with self._lock:
+            return max(0.0, float(self.capacity_bytes - self._used))
+
+    def free_fraction(self) -> float:
+        """Free-capacity fraction in [0, 1]; 1.0 when unbounded — the
+        placement score term for memory-pressure-aware scheduling."""
+        if not self.capacity_bytes:
+            return 1.0
+        with self._lock:
+            used = self._used
+        return max(0.0, (self.capacity_bytes - used) / self.capacity_bytes)
+
+    def bytes_of(self, obj_id: str) -> int:
+        """Recorded footprint of a resident object; 0 when absent. Reads
+        the size table, not the value — a stored ``None`` (footprint
+        ``sizeof(None)`` > 0) is no longer conflated with a missing
+        object the way the old ``get(...) is None`` probe did."""
+        with self._lock:
+            return self._sizes.get(obj_id, 0)
+
+    # ------------------------------------------------------------------- put
+
+    def put(self, obj_id: str, value: Any) -> bool:
+        """Store one object, evicting LRU residents if needed to respect
+        `capacity_bytes`. Returns False (and stores nothing) on a wiped
+        store — a transfer that raced node death must not resurrect
+        data there."""
+        size = sizeof(value)
+        with self._lock:
+            if self._wiped:
+                return False
+            old = self._sizes.pop(obj_id, None)
+            if old is not None:
+                del self._data[obj_id]
+                self._used -= old
+            evicted: List[Tuple[str, int, bool]] = []
+            if (self.capacity_bytes is not None
+                    and self._used + size > self.capacity_bytes):
+                evicted = self._evict_locked(
+                    self._used + size - self.capacity_bytes)
             self._data[obj_id] = value
+            self._sizes[obj_id] = size
+            self._used += size
+        for oid, sz, dead in evicted:
+            self._deregister_evicted(oid, sz, dead)
         self.gcs.add_location(obj_id, self.node_id)
+        return True
+
+    def _evict_locked(self, need: int) -> List[Tuple[str, int, bool]]:
+        """Pick >= `need` bytes of LRU victims, classified by the memory
+        manager: dead objects first, then secondary replicas, then
+        reconstructible last copies. Pops them from the table; the
+        caller deregisters outside the lock. Best-effort: if the scanned
+        window holds only protected objects, the put proceeds over
+        capacity (soft cap) rather than dropping data."""
+        mm = self.memory
+        dead: List[str] = []
+        secondary: List[str] = []
+        recon: List[str] = []
+        for i, oid in enumerate(self._data):
+            if i >= _MAX_EVICT_SCAN:
+                break
+            cls = mm.evict_class(oid, self.node_id) if mm is not None \
+                else "dead"
+            if cls == "dead":
+                dead.append(oid)
+            elif cls == "replicated":
+                secondary.append(oid)
+            elif cls == "reconstructible":
+                recon.append(oid)
+        victims: List[Tuple[str, int, bool]] = []
+        freed = 0
+        for oid in itertools.chain(dead, secondary, recon):
+            if freed >= need:
+                break
+            sz = self._sizes.pop(oid)
+            del self._data[oid]
+            self._used -= sz
+            freed += sz
+            victims.append((oid, sz, oid in dead))
+        return victims
+
+    def _deregister_evicted(self, oid: str, size: int, dead: bool) -> None:
+        self.gcs.remove_locations(oid, [self.node_id])
+        self.evictions += 1
+        if self.memory is not None:
+            self.memory.note_evicted(oid)
+            if dead and not self.gcs.locations(oid):
+                # last copy of an unreferenced object: nothing will ever
+                # legitimately fetch it again — mark freed so a stray
+                # borrowed-id fetch errors promptly instead of hanging
+                self.gcs.mark_freed(oid)
+        self.gcs.log_event("evict", oid, f"node{self.node_id}",
+                           bytes=size, dead=dead)
+
+    # ------------------------------------------------------------------ read
 
     def contains(self, obj_id: str) -> bool:
         with self._lock:
@@ -48,17 +183,27 @@ class ObjectStore:
 
     def get_local(self, obj_id: str) -> Any:
         with self._lock:
-            return self._data[obj_id]
+            value = self._data[obj_id]
+            self._data.move_to_end(obj_id)  # LRU touch
+            return value
 
     def get_if_present(self, obj_id: str, default: Any = MISSING) -> Any:
         """Single-lock conditional read — the node-local fast path.
         Returns `default` when the object is not resident (values may be
         None, so callers should compare against the MISSING sentinel)."""
         with self._lock:
-            return self._data.get(obj_id, default)
+            value = self._data.get(obj_id, MISSING)
+            if value is MISSING:
+                return default
+            self._data.move_to_end(obj_id)  # LRU touch
+            return value
+
+    # -------------------------------------------------------------- transfer
 
     def fetch_from(self, other: "ObjectStore", obj_id: str) -> Any:
-        """Inter-node transfer: copies the value into this store."""
+        """Inter-node transfer: copies the value into this store (unless
+        this store was wiped concurrently — the value is still returned
+        to the caller, but a dead store caches nothing)."""
         value = other.get_local(obj_id)
         if self.transfer_latency_s:
             time.sleep(self.transfer_latency_s)
@@ -76,25 +221,30 @@ class ObjectStore:
         except KeyError:
             return False
 
+    # ------------------------------------------------------------------ drop
+
     def discard(self, obj_id: str) -> None:
         """Drop one object and deregister its location (used to undo a
         transfer that raced a node kill — a wiped store must stay
-        empty)."""
+        empty — and by the GC's cluster-wide reclaim)."""
         with self._lock:
-            present = self._data.pop(obj_id, MISSING) is not MISSING
+            present = obj_id in self._data
+            if present:
+                del self._data[obj_id]
+                self._used -= self._sizes.pop(obj_id, 0)
         if present:
             self.gcs.remove_locations(obj_id, [self.node_id])
 
     def wipe(self) -> int:
-        """Simulate node loss: drop everything, deregister locations."""
+        """Simulate node loss: drop everything, deregister locations,
+        and refuse all future puts (a transfer completing after the wipe
+        must not resurrect objects or locations on a dead node)."""
         with self._lock:
+            self._wiped = True
             ids = list(self._data)
             self._data.clear()
+            self._sizes.clear()
+            self._used = 0
         for oid in ids:
             self.gcs.remove_locations(oid, [self.node_id])
         return len(ids)
-
-    def bytes_of(self, obj_id: str) -> int:
-        with self._lock:
-            v = self._data.get(obj_id)
-        return getattr(v, "nbytes", 64) if v is not None else 0

@@ -20,10 +20,29 @@ def task_timeline(gcs: ControlPlane) -> Dict[str, List]:
 
 
 def summarize(gcs: ControlPlane) -> Dict[str, float]:
-    """Aggregate scheduling metrics from the event log."""
-    tl = task_timeline(gcs)
+    """Aggregate scheduling + memory-governance metrics from the event
+    log. The eviction/reclaim counters come from the data plane's new
+    event kinds: ``evict`` (LRU eviction under store pressure, with the
+    freed byte count), ``reclaim`` (refcount-zero GC collection), and
+    ``reconstruct`` events tagged ``after_evict`` (lineage replay
+    repairing an evicted-but-still-referenced object)."""
+    raw = gcs.events()
+    tl: Dict[str, List] = defaultdict(list)
+    evictions = reclaims = reconstructs_after_evict = 0
+    bytes_freed = 0
+    for t, kind, task_id, where, extra in raw:
+        tl[task_id].append((t, kind, where, extra))
+        if kind == "evict":
+            evictions += 1
+            bytes_freed += extra.get("bytes", 0)
+        elif kind == "reclaim":
+            reclaims += 1
+            bytes_freed += extra.get("bytes", 0)
+        elif kind == "reconstruct" and extra.get("after_evict"):
+            reconstructs_after_evict += 1
     submit_to_start, run_times, spills, locals_ = [], [], 0, 0
     for task_id, events in tl.items():
+        events.sort()
         kinds = {k: t for t, k, _, _ in events}
         if "submit" in kinds and "start" in kinds:
             submit_to_start.append(kinds["start"] - kinds["submit"])
@@ -45,6 +64,10 @@ def summarize(gcs: ControlPlane) -> Dict[str, float]:
         "task_runtime_p50_ms": pct(run_times, 0.5) * 1e3,
         "spill_fraction": spills / max(len(tl), 1),
         "local_fraction": locals_ / max(len(tl), 1),
+        "evictions": evictions,
+        "reclaims": reclaims,
+        "bytes_freed": float(bytes_freed),
+        "reconstruct_after_evict": reconstructs_after_evict,
     }
 
 

@@ -18,6 +18,7 @@ from typing import Any, Dict, List, Optional, Tuple
 from repro.core.control_plane import (TASK_DONE, TASK_LOST, TASK_PENDING,
                                       TASK_RUNNING, ActorSpec, ControlPlane,
                                       TaskSpec)
+from repro.core.memory import MemoryManager, ObjectReclaimedError
 from repro.core.object_store import MISSING, ObjectStore
 from repro.core.scheduler import (GlobalScheduler, LocalScheduler,
                                   UnschedulableActorError, _ref_ids)
@@ -38,7 +39,8 @@ class Node:
     def __init__(self, cluster: "Cluster", node_id: int,
                  resources: Dict[str, float], num_workers: int,
                  spill_threshold: int = 4,
-                 transfer_latency_s: float = 0.0):
+                 transfer_latency_s: float = 0.0,
+                 store_capacity_bytes: Optional[int] = None):
         self.cluster = cluster
         self.node_id = node_id
         self.gcs = cluster.gcs
@@ -50,7 +52,9 @@ class Node:
         # standing actor grants: capacity that never returns to the pool
         # while the actor lives — scheduling must not queue tasks behind it
         self._actor_reserved: Dict[str, float] = {}
-        self.store = ObjectStore(node_id, cluster.gcs, transfer_latency_s)
+        self.store = ObjectStore(node_id, cluster.gcs, transfer_latency_s,
+                                 capacity_bytes=store_capacity_bytes,
+                                 memory=cluster.memory)
         self.run_queue: "queue.Queue[Optional[TaskSpec]]" = queue.Queue()
         self.local_scheduler = LocalScheduler(self, spill_threshold)
         self._actors: Dict[str, ActorContext] = {}
@@ -184,7 +188,22 @@ class Node:
                 return
             if self.store.contains(oid):
                 continue
-            for n in self.gcs.locations(oid):
+            locs = self.gcs.locations(oid)
+            # memory-pressure-aware push: don't evict residents to cache
+            # an argument speculatively — if it doesn't fit the current
+            # free bytes, let the worker's resolve() fetch it (or read
+            # it remotely) when the task actually runs
+            if self.store.capacity_bytes is not None:
+                src_bytes = max(
+                    (self.cluster.nodes[n].store.bytes_of(oid)
+                     for n in locs if n < len(self.cluster.nodes)),
+                    default=0)
+                if src_bytes > self.store.free_bytes():
+                    self.gcs.log_event("prefetch_skip", oid,
+                                       f"node{self.node_id}",
+                                       bytes=src_bytes)
+                    continue
+            for n in locs:
                 if (n == self.node_id or n >= len(self.cluster.nodes)
                         or not self.cluster.nodes[n].alive):
                     continue
@@ -258,12 +277,16 @@ class Cluster:
     def __init__(self, num_nodes: int = 2, workers_per_node: int = 2,
                  resources_per_node: Optional[Dict[str, float]] = None,
                  gcs_shards: int = 8, num_global_schedulers: int = 1,
-                 spill_threshold: int = 4, transfer_latency_s: float = 0.0):
+                 spill_threshold: int = 4, transfer_latency_s: float = 0.0,
+                 store_capacity_bytes: Optional[int] = None):
         # monotonic process-wide token: never reused across clusters (an
         # id() would be, after teardown), so per-cluster registration
         # guards compare against this
         self.epoch = next(_cluster_epochs)
         self.gcs = ControlPlane(gcs_shards)
+        # the GC authority must exist before the first node: every
+        # ObjectStore consults it for eviction classification
+        self.memory = MemoryManager(self)
         # num_global_schedulers now counts placement shards, not threads
         self.global_scheduler = GlobalScheduler(self, num_global_schedulers)
         self._unschedulable: List[TaskSpec] = []
@@ -272,7 +295,7 @@ class Cluster:
         self.nodes: List[Node] = []
         res = resources_per_node or {"cpu": float(workers_per_node)}
         self._node_defaults = (workers_per_node, spill_threshold,
-                               transfer_latency_s)
+                               transfer_latency_s, store_capacity_bytes)
         for _ in range(num_nodes):
             self.add_node(res)
 
@@ -280,9 +303,9 @@ class Cluster:
 
     def add_node(self, resources: Optional[Dict[str, float]] = None) -> Node:
         """Elastic scale-up: new nodes join by registering with the GCS."""
-        w, spill, lat = self._node_defaults
+        w, spill, lat, cap = self._node_defaults
         res = dict(resources or {"cpu": float(w)})
-        node = Node(self, len(self.nodes), res, w, spill, lat)
+        node = Node(self, len(self.nodes), res, w, spill, lat, cap)
         self.nodes.append(node)
         self.drain_unschedulable()
         self._retry_parked_actors()
@@ -312,6 +335,9 @@ class Cluster:
         — like an unschedulable task — and is placed when capacity joins
         (method calls submitted meanwhile are logged and replayed)."""
         self.gcs.register_actor(aspec)
+        # ctor args stay pinned for the actor's life: a restart replays
+        # the constructor, which must still be able to resolve them
+        self.memory.pin_task(aspec.actor_id, aspec)
         try:
             node = self.global_scheduler.place_actor(aspec)
         except UnschedulableActorError:
@@ -448,6 +474,13 @@ class Cluster:
                 # object lost or not yet produced: trigger lineage replay
                 # if its producing task already finished (R6)
                 self.maybe_reconstruct(obj_id)
+                if self.memory.unfetchable(obj_id):
+                    # reclaimed (refcount zero / api.free / dead-evicted)
+                    # with no lineage to recompute it: fail promptly
+                    # instead of parking until the timeout
+                    raise ObjectReclaimedError(
+                        f"object {obj_id} was reclaimed and has no "
+                        f"lineage to reconstruct it")
                 remaining = deadline - time.perf_counter()
                 if remaining <= 0:
                     raise TimeoutError(f"fetch({obj_id}) timed out")
@@ -580,7 +613,9 @@ class Cluster:
         self.gcs.update(f"task_state:{task_id}", trans)
         if not won:
             return  # someone else is already replaying
-        self.gcs.log_event("reconstruct", task_id, "lineage")
+        self.gcs.log_event(
+            "reconstruct", task_id, "lineage",
+            after_evict=self.memory.was_evicted_any(spec.return_ids))
         self.resubmit(spec)
 
     def _live_locs(self, obj_id: str):
@@ -588,6 +623,9 @@ class Cluster:
                 if n < len(self.nodes) and self.nodes[n].alive]
 
     def resubmit(self, spec: TaskSpec) -> None:
+        # re-pin the task's arguments: the DONE path unpinned them, and
+        # a replay must hold them resident again until it completes
+        self.memory.pin_task(spec.task_id, spec)
         # lost args must be reconstructed before the dataflow gate sees
         # them — scan with _ref_ids so container-nested refs (which the
         # gate counts as dependencies) are reconstructed too
@@ -647,14 +685,14 @@ class Cluster:
         threads are shut down (they would otherwise linger on the dead
         run queue forever). Mirroring `add_node`, tasks parked for a
         resource this node provides are then replayed."""
-        w, spill, lat = self._node_defaults
+        w, spill, lat, cap = self._node_defaults
         old = self.nodes[node_id]
         old.alive = False  # in-flight tasks on the old node become LOST
         old.store.wipe()   # no-op when kill_node already wiped
         requeue = self._drain_dead_node(old)
         dead_actors = old.drain_actors()  # before shutdown clears them
         old.shutdown()
-        node = Node(self, node_id, dict(old.capacity), w, spill, lat)
+        node = Node(self, node_id, dict(old.capacity), w, spill, lat, cap)
         self.nodes[node_id] = node  # installed before resubmits target it
         self.gcs.log_event("node_restart", f"node{node_id}", "cluster",
                            requeued=len(requeue))
@@ -667,5 +705,6 @@ class Cluster:
 
     def shutdown(self) -> None:
         self.global_scheduler.shutdown()
+        self.memory.shutdown()
         for n in self.nodes:
             n.shutdown()

@@ -203,6 +203,16 @@ class LocalScheduler:
             # dead node, or a resource kind this node will never have (R4)
             node.cluster.global_scheduler.submit(spec)
             return
+        if (not force_local and spec.mem_bytes
+                and node.store.free_bytes() < spec.mem_bytes):
+            # memory-pressure spill: the declared output footprint does
+            # not fit this store's free bytes — let the global scheduler
+            # steer the task toward a node with room (a forced global
+            # placement stays: the placer already weighed memory)
+            self.gcs.log_event("spill", spec.task_id,
+                               f"node{node.node_id}", mem_pressure=True)
+            node.cluster.global_scheduler.submit(spec)
+            return
         with self._lock:
             if node.try_acquire(spec.resources):
                 self.gcs.log_event("sched_local", spec.task_id,
@@ -312,9 +322,19 @@ class GlobalScheduler:
         steady = [n for n in nodes if n.satisfies_steady(spec.resources)]
         if not steady and not allow_unsteady:
             return None
+        mem_need = getattr(spec, "mem_bytes", 0)
         best, best_score = None, None
         for n in steady or nodes:
             score = self._locality_bytes(spec, n) - 4096.0 * n.load()
+            # memory-pressure term: free store fraction, scaled to one
+            # load-penalty unit — breaks ties toward nodes with room
+            # without swamping data locality
+            score += 4096.0 * n.store.free_fraction()
+            # a declared output footprint ("mem" resource hint) that
+            # doesn't fit the node's free bytes would force evictions
+            # there the moment the task stores its result
+            if mem_need and n.store.free_bytes() < mem_need:
+                score -= float(1 << 19)
             if extra_score is not None:
                 score += extra_score(n)
             if best_score is None or score > best_score:

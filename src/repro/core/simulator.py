@@ -11,7 +11,11 @@ validate the paper's R1/R2 claims at scale without hardware:
   * elastic scale-up/down and node failure with task re-execution,
   * stateful actors: FIFO method lanes pinned to owning nodes, with
     relocation + call replay on node death (cost `actor_call_s`,
-    calibrated from the runtime's measured method round trip).
+    calibrated from the runtime's measured method round trip),
+  * bounded object stores: per-node occupancy charged by task
+    `output_bytes`, oldest-first eviction past `store_capacity_bytes`
+    (cost `evict_s`, calibrated from the churn benchmark's measured GC
+    reclaim latency), and free-store-aware global placement.
 
 Time is virtual; costs are parameters measured from the real runtime's
 microbenchmarks (benchmarks/microbench.py writes them to JSON).
@@ -31,6 +35,7 @@ class SimCosts:
     worker_overhead_s: float = 15e-6 # dequeue/arg-resolve/result-store
     gcs_op_s: float = 3e-6           # control-plane write
     actor_call_s: float = 20e-6      # seq issue + log + mailbox dispatch
+    evict_s: float = 5e-6            # LRU eviction / GC reclaim per object
 
     @classmethod
     def from_microbench(cls, path: str = "BENCH_core.json",
@@ -81,11 +86,21 @@ class SimCosts:
                     1e-6)
             except (KeyError, TypeError):  # pragma: no cover
                 pass
+        # eviction/reclaim cost: the churn benchmark's measured GC
+        # reclaim latency (absent from pre-memory-governance runs)
+        evict = cls.evict_s
+        churn = data.get("churn")
+        if isinstance(churn, dict):
+            try:
+                evict = max(churn["reclaim_us"]["p50_us"] * us, 1e-7)
+            except (KeyError, TypeError):  # pragma: no cover
+                pass
         return cls(local_sched_s=max(submit, 1e-7),
                    global_sched_s=max(submit + 2 * gcs_op, 2e-7),
                    worker_overhead_s=worker,
                    gcs_op_s=max(gcs_op, 1e-8),
-                   actor_call_s=actor)
+                   actor_call_s=actor,
+                   evict_s=evict)
 
 
 @dataclass
@@ -101,6 +116,7 @@ class SimTask:
     spilled: bool = False
     attempts: int = 0
     actor_id: int = -1               # >= 0: a method call on that actor
+    output_bytes: int = 0            # store occupancy charged at finish
 
 
 class SimActor:
@@ -120,13 +136,44 @@ class SimActor:
 
 class SimNode:
     def __init__(self, node_id: int, num_workers: int,
-                 resources: Optional[Dict[str, float]] = None):
+                 resources: Optional[Dict[str, float]] = None,
+                 store_capacity_bytes: Optional[int] = None):
         self.node_id = node_id
         self.capacity = dict(resources or {"cpu": float(num_workers)})
         self.avail = dict(self.capacity)
         self.backlog: List[SimTask] = []
         self.running: Dict[int, SimTask] = {}
         self.alive = True
+        # bounded-store model: FIFO of finished outputs, evicted oldest
+        # first when occupancy exceeds capacity (mirrors the runtime's
+        # LRU under a steady produce-consume stream)
+        self.store_capacity_bytes = store_capacity_bytes
+        self.store_used = 0
+        self.store_q: List[Tuple[int, int]] = []   # (task_id, bytes)
+        self.evictions = 0
+
+    def store_put(self, task: SimTask, evict_cost_s: float
+                  ) -> Tuple[int, float]:
+        """Charge one finished output to the store; returns (evictions,
+        modeled eviction delay) incurred to make room."""
+        if not task.output_bytes:
+            return 0, 0.0
+        self.store_used += task.output_bytes
+        self.store_q.append((task.task_id, task.output_bytes))
+        n = 0
+        while (self.store_capacity_bytes is not None
+               and self.store_used > self.store_capacity_bytes
+               and self.store_q):
+            _, b = self.store_q.pop(0)
+            self.store_used -= b
+            self.evictions += 1
+            n += 1
+        return n, n * evict_cost_s
+
+    def store_free(self) -> float:
+        if self.store_capacity_bytes is None:
+            return float("inf")
+        return float(self.store_capacity_bytes - self.store_used)
 
     def can_run(self, t: SimTask) -> bool:
         return all(self.avail.get(k, 0.0) >= v
@@ -154,10 +201,12 @@ class ClusterSim:
 
     def __init__(self, num_nodes: int, workers_per_node: int = 8,
                  costs: SimCosts = SimCosts(), spill_threshold: int = 4,
-                 seed: int = 0):
+                 seed: int = 0, store_capacity_bytes: Optional[int] = None):
         self.costs = costs
         self.spill_threshold = spill_threshold
-        self.nodes = [SimNode(i, workers_per_node)
+        self.store_capacity_bytes = store_capacity_bytes
+        self.nodes = [SimNode(i, workers_per_node,
+                              store_capacity_bytes=store_capacity_bytes)
                       for i in range(num_nodes)]
         self.now = 0.0
         self._eq: List[Tuple[float, int, str, object]] = []
@@ -167,6 +216,10 @@ class ClusterSim:
         self.sched_latencies: List[Tuple[str, float]] = []
         self.failures_replayed = 0
         self.actors: List[SimActor] = []
+
+    @property
+    def evictions(self) -> int:
+        return sum(n.evictions for n in self.nodes)
 
     # ------------------------------------------------------------- events
 
@@ -292,7 +345,10 @@ class ClusterSim:
         home = self.nodes[task.submit_node]
         if home.alive and home.satisfies(task):
             sample.append(home)
-        best = min(sample, key=lambda n: n.load())
+        # memory-pressure-aware tiebreak (mirrors the runtime's
+        # _select_node): equal load resolves toward free store bytes, so
+        # big-output tasks land where memory is
+        best = min(sample, key=lambda n: (n.load(), -n.store_free()))
         if best.can_run(task):
             best.acquire(task)
             self._start(best, task, 0.0, "global")
@@ -324,13 +380,17 @@ class ClusterSim:
         node.release(task)
         task.finish_t = self.now
         self.finished.append(task)
+        # store the output; evictions under pressure delay the node's
+        # next dispatch by the calibrated per-object eviction cost
+        _, evict_delay = node.store_put(task, self.costs.evict_s)
         while node.backlog:
             nxt = next((t for t in node.backlog if node.can_run(t)), None)
             if nxt is None:
                 break
             node.backlog.remove(nxt)
             node.acquire(nxt)
-            self._start(node, nxt, self.costs.local_sched_s, "backlog")
+            self._start(node, nxt,
+                        self.costs.local_sched_s + evict_delay, "backlog")
 
     # ------------------------------------------------------- fault inject
 
@@ -382,7 +442,9 @@ class ClusterSim:
             elif kind == "kill":
                 self._do_kill(payload)
             elif kind == "add":
-                self.nodes.append(SimNode(len(self.nodes), payload))
+                self.nodes.append(SimNode(
+                    len(self.nodes), payload,
+                    store_capacity_bytes=self.store_capacity_bytes))
                 # elastic rebalance: spill half of every backlog back to
                 # the global scheduler so new capacity picks it up
                 for node in self.nodes[:-1]:

@@ -70,6 +70,10 @@ def execute_task(node: "Node", spec: TaskSpec, who: str) -> None:
             for rid, val in zip(spec.return_ids, rets):
                 node.store.put(rid, val)
             gcs.set_task_state(spec.task_id, TASK_DONE)
+            # GC hook: unpin args, collect fire-and-forget outputs whose
+            # handles were already dropped (LOST paths keep their pins —
+            # the resubmit still depends on the args)
+            node.cluster.memory.on_task_done(spec)
             gcs.log_event("finish", spec.task_id,
                           f"node{node.node_id}/{who}")
         else:
@@ -87,6 +91,7 @@ def execute_task(node: "Node", spec: TaskSpec, who: str) -> None:
             for rid in spec.return_ids:
                 node.store.put(rid, err)
             gcs.set_task_state(spec.task_id, TASK_DONE)
+            node.cluster.memory.on_task_done(spec)
             gcs.log_event("error", spec.task_id,
                           f"node{node.node_id}/{who}")
         else:
@@ -234,6 +239,7 @@ class ActorContext(threading.Thread):
                 for rid, val in zip(spec.return_ids, rets):
                     node.store.put(rid, val)
                 gcs.set_task_state(spec.task_id, TASK_DONE)
+                node.cluster.memory.on_task_done(spec)
                 gcs.log_event("actor_finish", spec.task_id,
                               f"node{node.node_id}/{who}")
                 self._maybe_checkpoint(spec.actor_seq + 1)
@@ -249,6 +255,7 @@ class ActorContext(threading.Thread):
                 for rid in spec.return_ids:
                     node.store.put(rid, err)
                 gcs.set_task_state(spec.task_id, TASK_DONE)
+                node.cluster.memory.on_task_done(spec)
                 gcs.log_event("actor_method_error", spec.task_id,
                               f"node{node.node_id}/{who}")
             else:

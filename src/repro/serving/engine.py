@@ -177,7 +177,12 @@ class ReplicaPool:
         collect responses in completion order (stragglers never gate the
         batch). Raises TimeoutError if the whole batch has not drained
         within `timeout` — a permanently lost wave must surface, not
-        spin."""
+        spin.
+
+        Consumed wave outputs are freed as soon as their responses are
+        extracted: under sustained request churn the replicas' object
+        stores hold only in-flight waves (bounded cache), instead of
+        accreting every response batch ever served."""
         wave_refs = [self.submit_wave(wave)
                      for wave in length_aligned_waves(requests, max_wave)]
         responses: List[Response] = []
@@ -193,6 +198,11 @@ class ReplicaPool:
                 pending, num_returns=1, timeout=min(remaining, 30.0))
             for ref in done:
                 responses.extend(self._core.get(ref))
+            if done:
+                # eager reclaim: the wait() reaping in submit_wave
+                # counts freed futures as done, so in-flight accounting
+                # stays correct
+                self._core.free(done)
         return responses
 
     def stats(self) -> List[Dict[str, int]]:

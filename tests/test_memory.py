@@ -1,0 +1,396 @@
+"""Memory-governed data plane: sizeof accounting, distributed
+ref-counting GC, bounded-store LRU eviction with lineage
+reconstruction, memory-aware placement, wipe/transfer races, DES store
+occupancy, and the profiler's eviction/reclaim counters."""
+import threading
+import time
+
+import pytest
+
+from repro import core
+from repro.core.control_plane import ControlPlane
+from repro.core.object_store import MISSING, ObjectStore
+from repro.core.profiler import summarize
+from repro.core.simulator import ClusterSim, SimCosts, SimTask
+
+
+@pytest.fixture()
+def cluster():
+    c = core.init(num_nodes=2, workers_per_node=2, spill_threshold=4096)
+    yield c
+    core.shutdown()
+
+
+@core.remote
+def blob(i, nbytes=1024):
+    return bytes([i % 251]) * nbytes
+
+
+# ------------------------------------------------------------- accounting
+
+
+def test_bytes_of_stored_none_is_nonzero():
+    gcs = ControlPlane(2)
+    store = ObjectStore(0, gcs)
+    store.put("x", None)
+    assert store.bytes_of("x") > 0          # a stored None is an object...
+    assert store.bytes_of("absent") == 0    # ...a missing one is absence
+    assert store.get_if_present("x") is None
+    assert store.get_if_present("absent") is MISSING
+
+
+def test_sizeof_accounting_tracks_puts_and_discards():
+    gcs = ControlPlane(2)
+    store = ObjectStore(0, gcs)
+    store.put("a", bytes(5000))
+    assert store.used_bytes >= 5000
+    assert store.bytes_of("a") >= 5000
+    store.put("a", bytes(100))              # overwrite re-accounts
+    assert store.used_bytes < 5000
+    store.discard("a")
+    assert store.used_bytes == 0
+    assert not gcs.locations("a")
+
+
+def test_sizeof_containers_and_arrays():
+    import numpy as np
+    assert core.sizeof(np.zeros(1000, dtype=np.float32)) >= 4000
+    assert core.sizeof(None) > 0
+    assert core.sizeof([bytes(100)] * 10) >= 1000
+
+
+# ----------------------------------------------------------- refcount GC
+
+
+def test_dropped_driver_ref_reclaimed_cluster_wide(cluster):
+    ref = blob.submit(7)
+    assert core.get(ref)[:1] == bytes([7])
+    oid = ref.id
+    assert cluster.gcs.refcount(oid) == 1
+    del ref
+    assert cluster.memory.wait_reclaimed(oid, timeout=5.0)
+    assert not cluster.gcs.locations(oid)
+    assert all(not n.store.contains(oid) for n in cluster.nodes)
+
+
+def test_arg_borrow_pins_until_consumer_done(cluster):
+    gate = threading.Event()
+
+    @core.remote
+    def gated(x):
+        gate.wait(5.0)
+        return len(x)
+
+    a = core.put(bytes(2048))
+    oid = a.id
+    out = gated.submit(a)
+    del a                     # count drops to zero, but the task pins it
+    time.sleep(0.1)
+    assert cluster.memory.quiesce(5.0)
+    assert cluster.gcs.locations(oid)       # still resident: pinned
+    gate.set()
+    assert core.get(out) == 2048
+    # consumer done -> unpinned -> reclaimed
+    assert cluster.memory.wait_reclaimed(oid, timeout=5.0)
+    assert not cluster.gcs.locations(oid)
+
+
+def test_task_spec_holds_borrows_not_owners(cluster):
+    a = core.put(bytes(128))
+    oid = a.id
+
+    @core.remote
+    def ident(x):
+        return x
+
+    out = ident.submit(a)
+    assert core.get(out) == bytes(128)
+    # the spec in the task table references `a` — but as a borrow, so
+    # dropping the driver handle must still reach count zero
+    del a
+    assert cluster.memory.wait_reclaimed(oid, timeout=5.0), \
+        "task-table spec kept an owning handle alive"
+
+
+def test_fire_and_forget_output_is_collected(cluster):
+    oid = blob.submit(3).id   # handle dropped immediately
+    deadline = time.perf_counter() + 5.0
+    while time.perf_counter() < deadline:
+        if cluster.gcs.is_freed(oid):
+            break
+        time.sleep(0.01)
+    assert cluster.gcs.is_freed(oid)
+    assert not cluster.gcs.locations(oid)
+
+
+def test_free_is_prompt_and_counts_as_done(cluster):
+    ref = core.put(bytes(4096))
+    core.free(ref)
+    done, pending = core.wait([ref], num_returns=1, timeout=1.0)
+    assert done and not pending
+    t0 = time.perf_counter()
+    with pytest.raises(core.ObjectReclaimedError):
+        core.get(ref, timeout=10.0)
+    assert time.perf_counter() - t0 < 5.0   # prompt, not a timeout
+
+
+def test_free_wakes_already_blocked_wait(cluster):
+    # a future whose producing task will never run (parked on a
+    # resource no node has): a blocked wait() must not sleep to its
+    # timeout once free() discards the future — the freed state is
+    # pushed over the completion-notify channel
+    @core.remote(resources={"tpu": 8.0})
+    def never():
+        return 1
+
+    ref = never.submit()
+    results = {}
+
+    def waiter():
+        results["wait"] = core.wait([ref], num_returns=1, timeout=30.0)
+
+    tw = threading.Thread(target=waiter)
+    tw.start()
+    time.sleep(0.2)           # parked on the notify channel now
+    t0 = time.perf_counter()
+    core.free(ref)
+    tw.join(10.0)
+    assert not tw.is_alive() and time.perf_counter() - t0 < 5.0, \
+        "free() did not wake the blocked wait()"
+    done, pending = results["wait"]
+    assert done and not pending           # freed future counts as done
+
+
+def test_concurrent_eviction_keeps_one_replica_of_put_object():
+    c = core.init(num_nodes=2, workers_per_node=2, spill_threshold=4096,
+                  store_capacity_bytes=16 * 1024)
+    try:
+        h = core.ObjectRef("dual")
+        c.memory.adopt(h)
+        c.nodes[0].store.put("dual", bytes(4096))
+        c.nodes[1].store.fetch_from(c.nodes[0].store, "dual")
+        # pressure BOTH stores simultaneously: the asymmetric replica
+        # rule must leave the lowest-id copy standing even though each
+        # side sees "another replica exists" at classification time
+        pins = []
+        for i in range(6):
+            for nd in c.nodes:
+                f = core.ObjectRef(f"pin{nd.node_id}-{i}")
+                c.memory.adopt(f)
+                pins.append(f)
+                nd.store.put(f"pin{nd.node_id}-{i}", bytes(4096))
+        assert c.nodes[0].store.contains("dual"), \
+            "both replicas of an unreconstructable object were evicted"
+        del h, pins
+    finally:
+        core.shutdown()
+
+
+# ------------------------------------------------- eviction + reconstruct
+
+
+def test_evicted_then_refetched_reconstructs_via_lineage():
+    c = core.init(num_nodes=2, workers_per_node=2, spill_threshold=4096,
+                  store_capacity_bytes=32 * 1024)
+    try:
+        keep = blob.submit(5, 4096)
+        assert core.get(keep)[:1] == bytes([5])
+        (nid,) = list(c.gcs.locations(keep.id))[:1]
+        node = c.nodes[nid]
+        # fill the owning node with protected residents (adopted handles,
+        # no lineage) until `keep` — referenced but reconstructible — is
+        # the eviction candidate and gets dropped
+        fillers = []
+        for i in range(7):   # ~28 KB protected + 4 KB keep > 32 KB cap
+            h = core.ObjectRef(f"fill{i}")
+            c.memory.adopt(h)
+            fillers.append(h)
+            node.store.put(f"fill{i}", bytes(4096))
+        assert not node.store.contains(keep.id)
+        assert node.store.used_bytes <= 32 * 1024
+        # transparent repair on refetch
+        assert core.get(keep) == bytes([5]) * 4096
+        s = summarize(c.gcs)
+        assert s["evictions"] >= 1
+        assert s["reconstruct_after_evict"] >= 1
+        assert s["bytes_freed"] > 0
+        del fillers
+    finally:
+        core.shutdown()
+
+
+def test_eviction_prefers_secondary_replica():
+    c = core.init(num_nodes=2, workers_per_node=2, spill_threshold=4096,
+                  store_capacity_bytes=16 * 1024)
+    try:
+        # primary on node0, replica on node1; both referenced
+        h = core.ObjectRef("obj-rep")
+        c.memory.adopt(h)
+        c.nodes[0].store.put("obj-rep", bytes(4096))
+        c.nodes[1].store.fetch_from(c.nodes[0].store, "obj-rep")
+        assert c.gcs.locations("obj-rep") == frozenset({0, 1})
+        # pressure node1 with protected (referenced, last-copy) objects
+        fillers = []
+        for i in range(6):
+            f = core.ObjectRef(f"p{i}")
+            c.memory.adopt(f)
+            fillers.append(f)
+            c.nodes[1].store.put(f"p{i}", bytes(4096))
+        # the secondary replica was sacrificed; the primary survives
+        assert not c.nodes[1].store.contains("obj-rep")
+        assert c.nodes[0].store.contains("obj-rep")
+        assert 0 in c.gcs.locations("obj-rep")
+        del h, fillers
+    finally:
+        core.shutdown()
+
+
+def test_eviction_never_drops_referenced_last_copy_without_lineage():
+    c = core.init(num_nodes=1, workers_per_node=2, spill_threshold=4096,
+                  store_capacity_bytes=8 * 1024)
+    try:
+        refs = [core.put(bytes(4096)) for _ in range(4)]  # 2x capacity
+        # all four are referenced last copies with no lineage: protected,
+        # so the store runs over capacity rather than losing data
+        assert all(core.get(r) == bytes(4096) for r in refs)
+        del refs
+    finally:
+        core.shutdown()
+
+
+# ------------------------------------------------------ wipe / races (S3)
+
+
+def _standalone_pair(latency=0.0):
+    gcs = ControlPlane(2)
+    return gcs, ObjectStore(0, gcs), ObjectStore(1, gcs,
+                                                transfer_latency_s=latency)
+
+
+def test_fetch_from_into_wiped_store_does_not_resurrect():
+    gcs, a, b = _standalone_pair()
+    a.put("x", [1, 2, 3])
+    b.wipe()
+    val = b.fetch_from(a, "x")       # caller still gets the value...
+    assert val == [1, 2, 3]
+    assert not b.contains("x")       # ...but the wiped store stays empty
+    assert b.used_bytes == 0
+    assert gcs.locations("x") == frozenset({0})
+
+
+def test_wipe_racing_inflight_transfer_stays_empty():
+    gcs, a, b = _standalone_pair(latency=0.05)
+    a.put("x", bytes(1000))
+    out = {}
+    t = threading.Thread(
+        target=lambda: out.setdefault("v", b.fetch_from(a, "x")))
+    t.start()
+    time.sleep(0.01)                 # transfer is mid-flight (sleeping)
+    b.wipe()
+    t.join(2.0)
+    assert out["v"] == bytes(1000)
+    assert not b.contains("x")
+    assert b.used_bytes == 0
+    assert 1 not in gcs.locations("x")   # location did not resurrect
+
+
+def test_prefetch_into_wiped_store_keeps_locations_clean():
+    gcs, a, b = _standalone_pair()
+    a.put("x", 41)
+    b.wipe()
+    b.prefetch_from(a, "x")
+    assert not b.contains("x")
+    assert gcs.locations("x") == frozenset({0})
+    # discard on the wiped store is a no-op, not an error
+    b.discard("x")
+    assert gcs.locations("x") == frozenset({0})
+
+
+# --------------------------------------------------- placement + pressure
+
+
+def test_mem_hint_steers_placement_to_free_store():
+    c = core.init(num_nodes=2, workers_per_node=2, spill_threshold=4096,
+                  store_capacity_bytes=64 * 1024)
+    try:
+        # node0 nearly full of protected bytes
+        pins = []
+        for i in range(14):
+            h = core.ObjectRef(f"full{i}")
+            c.memory.adopt(h)
+            pins.append(h)
+            c.nodes[0].store.put(f"full{i}", bytes(4096))
+
+        @core.remote(resources={"mem": 48 * 1024})
+        def big():
+            from repro.core.worker import current_node
+            return current_node().node_id
+
+        assert all(core.get(big.submit()) == 1 for _ in range(4))
+        del pins
+    finally:
+        core.shutdown()
+
+
+def test_des_store_occupancy_and_eviction():
+    sim = ClusterSim(4, workers_per_node=2, costs=SimCosts(),
+                     store_capacity_bytes=10_000, seed=0)
+    for i in range(400):
+        sim.submit(SimTask(i, 1e-3, i % 4, output_bytes=500), at=0.0)
+    sim.run()
+    assert len(sim.finished) == 400
+    assert sim.evictions > 0
+    assert all(n.store_used <= 10_000 for n in sim.nodes)
+
+
+def test_simcosts_calibrate_evict_from_churn(tmp_path):
+    import json
+    doc = {"runs": {"pr4": {
+        "submit": {"p50_us": 20.0}, "gcs_put": {"p50_us": 1.0},
+        "get_done": {"p50_us": 5.0}, "e2e_local": {"p50_us": 70.0},
+        "churn": {"reclaim_us": {"p50_us": 40.0}},
+    }}, "speedup_run": "pr4"}
+    p = tmp_path / "bench.json"
+    p.write_text(json.dumps(doc))
+    costs = SimCosts.from_microbench(str(p))
+    assert costs.evict_s == pytest.approx(40e-6)
+
+
+# ------------------------------------------------------------- stress (AC)
+
+
+def test_bounded_store_stress_10k_tasks():
+    """Acceptance: per-node capacity a small fraction of total output
+    bytes; 10k tasks complete correctly, resident bytes never exceed
+    capacity, dropped refs are reclaimed cluster-wide, and an
+    evicted-then-refetched early object reconstructs via lineage."""
+    cap = 64 * 1024
+    c = core.init(num_nodes=2, workers_per_node=2, spill_threshold=4096,
+                  store_capacity_bytes=cap)
+    try:
+        n, batch = 10_000, 160          # ~10 MB of outputs vs 128 KB total
+        keep = blob.submit(0, 1024)     # early ref held to the very end
+        assert core.get(keep) == bytes([0]) * 1024
+        peak = 0
+        for start in range(0, n, batch):
+            refs = [blob.submit(i) for i in range(start, start + batch)]
+            vals = core.get(refs)
+            for i, v in zip(range(start, start + batch), vals):
+                assert v[:1] == bytes([i % 251])
+                assert len(v) == 1024
+            peak = max(peak, max(nd.store.used_bytes for nd in c.nodes))
+            del refs, vals
+        assert peak <= cap, f"resident bytes {peak} exceeded capacity {cap}"
+        # cluster-wide reclamation of everything the driver dropped
+        assert c.memory.quiesce(30.0)
+        resident = sum(nd.store.used_bytes for nd in c.nodes)
+        assert resident <= 8 * 1024, \
+            f"{resident} resident bytes survived the drop"
+        # the early object was long evicted; lineage brings it back
+        assert core.get(keep) == bytes([0]) * 1024
+        s = summarize(c.gcs)
+        assert s["evictions"] > 0
+        assert s["reclaims"] > 0
+        assert s["bytes_freed"] > 0
+    finally:
+        core.shutdown()
