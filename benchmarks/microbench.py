@@ -4,15 +4,17 @@ Paper targets (their prototype): submit ~35us, get-after-done ~110us,
 empty-task e2e ~290us local / ~1ms remote. We measure those four
 quantities on our runtime plus the node-local get fast path, wait() wakeup
 latency, raw control-plane op latency, the stateful-actor method-call
-round trip, task throughput, and a bounded-store churn loop (steady-state
-resident bytes + GC reclaim latency under sustained put→get→drop).
+round trip, task throughput, a bounded-store churn loop (steady-state
+resident bytes + GC reclaim latency under sustained put→get→drop), and
+the compiled-graph dispatch A/B (a 3-node chain as one `execute()` vs
+three eager submits, same window).
 
 Results land in two places:
 
   * ``benchmarks/results/microbench.json`` — this run only (feeds the DES
     simulator's cost model via ``SimCosts.from_microbench``);
   * ``BENCH_core.json`` at the repo root — the tracked perf trajectory.
-    Each invocation upserts its ``--run-name`` entry (default ``pr4``) and
+    Each invocation upserts its ``--run-name`` entry (default ``pr5``) and
     preserves the other entries (notably ``seed``, the pre-PR1 baseline),
     then recomputes speedups vs the seed. Regenerate with:
 
@@ -199,6 +201,35 @@ def run(n: int = 2000) -> dict:
         "reclaim_timeouts": timeouts,
         "reclaim_us": _stats(reclaim_ts) if reclaim_ts else {},
     }
+    # 11. compiled graph dispatch: a 3-node chain as one compiled
+    #     execute() vs three eager submits, A/B in the same window.
+    #     The compiled path pays one batched control-plane registration
+    #     and runs the chain via inline chaining / graph-aware steal;
+    #     the eager path pays three registrations plus two
+    #     dataflow-gate passes. Fresh cluster so §10's bounded stores
+    #     don't perturb it.
+    cluster = core.init(num_nodes=2, workers_per_node=2,
+                        spill_threshold=4096)
+
+    @core.remote
+    def inc(x):
+        return x + 1
+
+    from repro import dag
+    cg = dag.compile(inc.bind(inc.bind(inc.bind(dag.input(0)))))
+    compiled = _bench(lambda: core.get(cg.execute(0)), max(n // 4, 50))
+    eager = _bench(
+        lambda: core.get(inc.submit(inc.submit(inc.submit(0)))),
+        max(n // 4, 50))
+    out["graph_step"] = {
+        "nodes": 3,
+        "compiled": compiled,
+        "eager": eager,
+        "speedup_vs_eager": round(eager["p50_us"] / compiled["p50_us"], 2)
+        if compiled["p50_us"] else 0.0,
+    }
+    core.shutdown()
+
     out["paper_targets_us"] = PAPER_TARGETS_US
     return out
 
@@ -230,6 +261,10 @@ def update_bench_file(measurements: dict, run_name: str = "pr1",
             speedup["throughput"] = round(
                 cur["throughput_tasks_per_s"]
                 / seed["throughput_tasks_per_s"], 2)
+        gstep = cur.get("graph_step")
+        if gstep:
+            # same-window A/B, not a vs-seed ratio (seed has no dag API)
+            speedup["graph_step_vs_eager"] = gstep["speedup_vs_eager"]
         doc["speedup_vs_seed"] = speedup
         doc["speedup_run"] = run_name
     path.write_text(json.dumps(doc, indent=1) + "\n")
@@ -239,15 +274,19 @@ def update_bench_file(measurements: dict, run_name: str = "pr1",
 def check_regression(measurements: dict, ref_run: str,
                      path: Path = BENCH_FILE,
                      keys=("e2e_remote", "wait_one", "actor_call",
-                           "churn"),
+                           "churn", "graph_step"),
                      slack: float = None) -> bool:
     """CI guard: the hop-free remote path, the wait notify path, the
-    actor method-call path, and the memory-governance churn loop must
-    not regress vs the committed BENCH_core.json record. Keys absent
-    from the reference run (e.g. actor_call before PR 3, churn before
-    PR 4) are skipped. The churn check additionally fails — regardless
-    of the reference — when steady-state resident bytes grow unbounded
-    across iterations (a data-plane leak) or any reclaim timed out. The
+    actor method-call path, the memory-governance churn loop, and the
+    compiled-graph dispatch must not regress vs the committed
+    BENCH_core.json record. Keys absent from the reference run (e.g.
+    actor_call before PR 3, churn before PR 4, graph_step before PR 5)
+    are skipped. The churn check additionally fails — regardless of the
+    reference — when steady-state resident bytes grow unbounded across
+    iterations (a data-plane leak) or any reclaim timed out; the
+    graph_step check additionally fails when the compiled 3-node chain
+    is not cheaper than the eager 3-submit chain in the *same
+    measurement window* (the whole point of batched dispatch). The
     slack factor absorbs CI-machine jitter (override via
     BENCH_REGRESSION_SLACK)."""
     if slack is None:
@@ -284,6 +323,27 @@ def check_regression(measurements: dict, ref_run: str,
                 print(f"bench-check churn.reclaim: p50 {cur:.1f}us vs "
                       f"committed {committed:.1f}us (limit {limit:.1f}us) "
                       f"{'ok' if good else 'REGRESSION'}")
+                ok = ok and good
+            continue
+        if key == "graph_step":
+            cur_gs = measurements.get("graph_step")
+            if not cur_gs:
+                continue
+            comp = cur_gs["compiled"]["p50_us"]
+            eager = cur_gs["eager"]["p50_us"]
+            cheaper = comp < eager
+            print(f"bench-check graph_step: compiled p50 {comp:.1f}us vs "
+                  f"eager {eager:.1f}us (same window) "
+                  f"{'ok' if cheaper else 'NOT CHEAPER'}")
+            ok = ok and cheaper
+            ref_gs = ref.get("graph_step")
+            if ref_gs and ref_gs.get("compiled"):
+                committed = ref_gs["compiled"]["p50_us"]
+                limit = committed * slack
+                good = comp <= limit
+                print(f"bench-check graph_step.compiled: p50 {comp:.1f}us "
+                      f"vs committed {committed:.1f}us (limit "
+                      f"{limit:.1f}us) {'ok' if good else 'REGRESSION'}")
                 ok = ok and good
             continue
         if key not in ref:
@@ -328,6 +388,13 @@ def rows():
         yield ("microbench.churn_reclaim_us",
                out["churn"]["reclaim_us"].get("p50_us", 0.0),
                "GC reclaim latency")
+    if out.get("graph_step"):
+        yield ("microbench.graph_step_compiled_us",
+               out["graph_step"]["compiled"]["p50_us"],
+               "compiled 3-node chain execute->get")
+        yield ("microbench.graph_step_eager_us",
+               out["graph_step"]["eager"]["p50_us"],
+               "eager 3-submit chain (same window)")
 
 
 def main() -> None:
@@ -337,7 +404,7 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="quick CI run: small n, does not touch "
                          "BENCH_core.json")
-    ap.add_argument("--run-name", default="pr4",
+    ap.add_argument("--run-name", default="pr5",
                     help="entry name in BENCH_core.json")
     ap.add_argument("--out", default=None,
                     help="override BENCH_core.json path")

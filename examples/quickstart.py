@@ -35,7 +35,18 @@ def main():
     done, pending = core.wait(futures, num_returns=16, timeout=0.008)
     print(f"after 8ms: {len(done)} done, {len(pending)} stragglers")
 
-    # -- 4. transparent fault tolerance (R6): kill the node holding a
+    # -- 4. compiled graphs: the same DAG shape replayed at high rate
+    #       pays ONE batched control-plane round per invocation instead
+    #       of one per task — bind() builds the graph lazily, compile()
+    #       plans it once, execute() replays it with fresh inputs
+    from repro import dag
+    rollouts = [rollout.bind(dag.input(i)) for i in range(4)]
+    step = dag.compile(reduce_mean.bind(*rollouts))
+    for gen in range(2):
+        ref = step.execute(*(200 + 100 * gen + s for s in range(4)))
+        print(f"compiled gen {gen}:", core.get(ref).round(3))
+
+    # -- 5. transparent fault tolerance (R6): kill the node holding a
     #       result; lineage replay reconstructs it on get()
     ref = rollout.submit(7)
     val = core.get(ref)
@@ -44,7 +55,7 @@ def main():
     val2 = core.get(ref)                              # replayed
     print("survived node failure:", np.allclose(val, val2))
 
-    # -- 5. profiling (R7): every transition is in the control plane
+    # -- 6. profiling (R7): every transition is in the control plane
     from repro.core.profiler import summarize
     print({k: round(v, 1) for k, v in summarize(cluster.gcs).items()})
     core.shutdown()

@@ -2,7 +2,7 @@
 simulations feed policy updates, built on futures + wait + a stateful
 policy actor, with optional fault injection.
 
-Run:  PYTHONPATH=src python examples/rl_pipeline.py [--kill-node]
+Run:  PYTHONPATH=src python examples/rl_pipeline.py [--kill-node] [--eager]
 
 A tiny REINFORCE-style agent learns a bandit-ish task. The policy lives in
 a `PolicyLearner` *actor*: rollout batches stream into `update` method
@@ -14,6 +14,14 @@ actor state straight into downstream tasks. Rollouts are remote CPU tasks
 stragglers never stall the learner; `--kill-node` may land on the
 learner's node, in which case the actor restarts elsewhere and replays
 its update log (or restores its `__getstate__` checkpoint).
+
+The hot loop runs as a *compiled graph* by default: the per-iteration
+shape — `update(batch)` then `weights()` then a generation of
+`simulate(w, seed)` fan-out — is bound once (`bind`), compiled once
+(`dag.compile`), and replayed every iteration (`cg.execute(batch,
+*seeds)`), so each step pays ONE batched control-plane registration
+instead of one round per task. `--eager` runs the original
+submit-per-task loop for comparison; both train the same policy.
 """
 import argparse
 import time
@@ -22,7 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import core
+from repro import core, dag
 
 
 def make_policy():
@@ -92,14 +100,35 @@ def simulate(w_host, seed):
     return obs, action, reward
 
 
+#: Fresh simulations launched per training step by the compiled loop —
+#: the fixed fan-out the step graph is compiled for.
+SIMS_PER_STEP = 8
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--kill-node", action="store_true")
     ap.add_argument("--iters", type=int, default=30)
+    ap.add_argument("--eager", action="store_true",
+                    help="submit-per-task hot loop (the compiled-graph "
+                         "loop is the default)")
     args = ap.parse_args()
 
     cluster = core.init(num_nodes=4, workers_per_node=2)
     learner = PolicyLearner.submit()
+
+    # compiled step: the whole per-iteration graph — update the policy
+    # with this step's batch, read the post-update weights (ordered
+    # method futures: the seq block guarantees update-before-weights),
+    # and fan a fresh generation of simulations off the weights future.
+    # Compiled once; every iteration is one epoch-tagged execute().
+    step = None
+    if not args.eager:
+        upd = learner.update.bind(dag.input(0))
+        w = learner.weights.bind()
+        sims = [simulate.bind(w, dag.input(1 + i))
+                for i in range(SIMS_PER_STEP)]
+        step = dag.compile([upd] + sims)
 
     returns = []
     # the weights *future* feeds simulations directly — actor state as a
@@ -119,20 +148,28 @@ def main():
                                       num_returns=min(4, len(pending)),
                                       timeout=0.5)
             batch.extend(core.get(done))
-        # incremental update: an ordered method future — later weights()
-        # calls are guaranteed to see it
-        ret_ref = learner.update.submit(tuple(batch))
+        if step is not None:
+            # one batched dispatch for update + weights + the whole
+            # next generation; sink refs are ordinary futures
+            refs = step.execute(tuple(batch),
+                                *(1000 * it + s
+                                  for s in range(SIMS_PER_STEP)))
+            ret_ref = refs[0]
+            pending += refs[1:]
+        else:
+            # eager comparison loop: one control-plane round per task
+            ret_ref = learner.update.submit(tuple(batch))
+            w_ref = learner.weights.submit()
+            pending += [simulate.submit(w_ref, 1000 * it + s)
+                        for s in range(16 - len(pending))]
         returns.append(core.get(ret_ref, timeout=30))
-        # next-generation simulations launch immediately (R3) against the
-        # post-update weights future
-        w_ref = learner.weights.submit()
-        pending += [simulate.submit(w_ref, 1000 * it + s)
-                    for s in range(16 - len(pending))]
         if it % 5 == 0 or it == args.iters - 1:
             print(f"iter {it:3d}  mean return {np.mean(returns[-5:]):+.3f}")
 
     improved = np.mean(returns[-5:]) > np.mean(returns[:5])
-    print(f"policy improved: {improved} ({len(returns)} updates applied)")
+    mode = "eager" if args.eager else "compiled"
+    print(f"policy improved: {improved} ({len(returns)} {mode} updates "
+          "applied)")
     core.shutdown()
     return 0 if improved else 1
 

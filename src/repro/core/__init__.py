@@ -1,6 +1,7 @@
 """The paper's primary contribution: a real-time dataflow execution
 framework — futures + dynamic task graphs + stateful actors (api),
-sharded control plane (control_plane), hybrid local/global scheduling
+compiled task graphs with batched one-round dispatch (dag), sharded
+control plane (control_plane), hybrid local/global scheduling
 with per-actor FIFO mailbox lanes (scheduler), bounded garbage-collected
 in-memory object stores (object_store + memory: distributed ref
 counting, LRU evict-and-reconstruct), lineage-replay fault tolerance
@@ -9,8 +10,10 @@ a cluster-scale discrete-event simulator (simulator)."""
 from repro.core.api import (ActorClass, ActorHandle, ObjectRef,  # noqa: F401
                             RemoteFunction, attach, free, get, init, put,
                             remote, shutdown, wait)
+from repro.core import dag  # noqa: F401
 from repro.core.control_plane import (ActorSpec, ControlPlane,  # noqa: F401
                                       TaskSpec)
+from repro.core.dag import CompiledGraph, GraphNode  # noqa: F401
 from repro.core.memory import (MemoryManager,  # noqa: F401
                                ObjectReclaimedError, sizeof)
 from repro.core.runtime import Cluster, Node  # noqa: F401

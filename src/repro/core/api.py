@@ -19,7 +19,29 @@
      failure by replaying the logged method sequence (or restoring an
      opt-in `__getstate__` checkpoint and replaying the tail) — the
      stateful analogue of lineage reconstruction (R6).
-  7. Memory & GC — object stores are bounded, accounted LRU caches
+  7. Compiled graphs — the eager ``submit()`` path pays one
+     control-plane registration + scheduling pass per task, every time.
+     Workloads that re-run the same graph shape at high rate (serving
+     pipelines, RL feedback loops) can compile the orchestration once
+     and replay it:
+
+         node = fn.bind(x)          # lazy GraphNode, nothing submitted
+         cg = dag.compile(sink)     # topo order + placement + actor seq
+         ref = cg.execute(inputs)   # ONE batched registration, grouped
+                                    # per-node dispatch, inline chaining
+
+     ``bind`` mirrors ``submit``'s argument rules (GraphNodes,
+     ``dag.input(i)`` placeholders, ObjectRefs, plain values — top
+     level or one level inside a plain list/tuple). ``execute`` returns
+     ordinary ObjectRefs: they compose with get/wait/free, actor
+     ordering, and lineage replay exactly like eager futures, and each
+     invocation is epoch-tagged so one plan serves a whole loop. Prefer
+     ``bind`` over ``submit`` when a multi-node graph is re-executed
+     often enough to amortize one compile; stay eager for one-off or
+     shape-changing task patterns. Failure semantics match the eager
+     path: a killed node's compiled tasks replay via lineage, and a
+     raising node stores a TaskError that propagates to the sink refs.
+  8. Memory & GC — object stores are bounded, accounted LRU caches
      governed by distributed reference counting. Ownership rules:
        * a handle returned by ``submit()`` / ``put()`` **owns** one
          reference; dropping it (``del`` / scope exit) releases the
@@ -111,6 +133,10 @@ class ObjectRef:
         # owning handles release their count; deferred via the manager's
         # reclaim queue because __del__ can fire on any thread while
         # arbitrary locks are held. Borrows have no _owner stamp.
+        # `release` itself is a silent no-op after shutdown and during
+        # interpreter finalization (when the reclaim queue and threading
+        # may already be torn down), so a lingering handle dropped at
+        # teardown never surfaces an "Exception ignored in __del__".
         try:
             owner = self.__dict__.get("_owner")
             if owner is not None:
@@ -182,6 +208,21 @@ def _holds_ref(obj) -> bool:
     return False
 
 
+def _holds_graph_node(obj) -> bool:
+    """Deep probe for graph placeholders in bound arguments (the graph
+    analogue of ``_holds_ref`` — dag.py rejects placeholders nested
+    deeper than the substitution pass reaches)."""
+    from repro.core.dag import _GRAPHY
+    if isinstance(obj, _GRAPHY):
+        return True
+    if isinstance(obj, dict):
+        return any(_holds_graph_node(k) or _holds_graph_node(v)
+                   for k, v in obj.items())
+    if isinstance(obj, (list, tuple, set, frozenset)):
+        return any(_holds_graph_node(e) for e in obj)
+    return False
+
+
 class RemoteFunction:
     def __init__(self, fn, num_returns: int = 1,
                  resources: Optional[Dict[str, float]] = None):
@@ -246,11 +287,28 @@ class RemoteFunction:
                         kwargs=bkwargs, return_ids=ret_ids,
                         resources=self.resources, submitter_node=submitter,
                         mem_bytes=self.mem_bytes)
-        gcs.register_task(spec)
+        # pin BEFORE the task becomes visible: with registration first,
+        # another thread dropping the last owning handle of an argument
+        # in the gap let the reclaimer collect it out from under the
+        # not-yet-pinned task (a spurious ObjectReclaimedError for
+        # lineage-less objects)
         mm.pin_task(task_id, spec)  # args stay resident until DONE
+        gcs.register_task(spec)
         gcs.log_event("submit", task_id, f"node{submitter}")
         entry.local_scheduler.submit(spec)
         return refs[0] if self.num_returns == 1 else refs
+
+    def bind(self, *args, **kwargs):
+        """Lazy graph construction: returns a GraphNode for use with
+        ``dag.compile`` — nothing is registered or scheduled. Argument
+        rules mirror ``submit``, plus GraphNodes and ``dag.input(i)``
+        placeholders are legal wherever an ObjectRef is."""
+        from repro.core.dag import GraphNode
+        return GraphNode(func_name=self.name, fn=self._fn,
+                         num_returns=self.num_returns,
+                         resources=self.resources,
+                         mem_bytes=self.mem_bytes,
+                         args=args, kwargs=kwargs)
 
     def __call__(self, *args, **kwargs):
         return self._fn(*args, **kwargs)
@@ -345,13 +403,28 @@ class ActorMethod:
                         submitter_node=submitter,
                         actor_id=h.actor_id, actor_method=self._name,
                         actor_seq=seq)
-        gcs.register_task(spec)
+        # pin before the call becomes visible (same ordering rule as
+        # RemoteFunction.submit: a concurrent handle drop must find the
+        # argument pinned)
         cluster.memory.pin_task(task_id, spec)
+        gcs.register_task(spec)
         gcs.log_actor_call(h.actor_id, seq, task_id)
         gcs.log_event("submit_actor", task_id, f"node{submitter}",
                       actor=h.actor_id, seq=seq)
         cluster.submit_actor_task(spec)
         return ref
+
+    def bind(self, *args, **kwargs):
+        """Lazy actor-method graph node for ``dag.compile``. The call's
+        sequence number is reserved per invocation at ``execute()`` (a
+        contiguous block per actor, assigned in plan order), so compiled
+        calls interleave with eager ``submit`` calls in one total
+        order."""
+        from repro.core.dag import GraphNode
+        h = self._handle
+        return GraphNode(func_name=f"{h.class_name}.{self._name}",
+                         actor_handle=h, actor_method=self._name,
+                         args=args, kwargs=kwargs)
 
 
 class ActorHandle:

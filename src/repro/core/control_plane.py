@@ -68,6 +68,13 @@ class TaskSpec:
     # submit): expected output footprint, scored against store free
     # bytes — NOT a capacity resource (never acquired/released)
     mem_bytes: int = 0
+    # compiled-graph membership: the invocation this task belongs to and
+    # its node index in the compiled plan. The runtime uses these to
+    # release/dispatch plan-order dependents directly (no dataflow-gate
+    # pass for intra-graph edges) and to inline-chain same-node
+    # dependents on the finishing worker. Plain eager tasks: defaults.
+    graph_inv: Optional[str] = None
+    graph_idx: int = -1
 
 
 @dataclass
@@ -231,12 +238,24 @@ class ControlPlane:
 
     def register_task(self, spec: TaskSpec) -> None:
         """Spec + state + lineage land in one batched sharded write."""
-        items: List[Tuple[str, Any]] = [
-            (f"task:{spec.task_id}", spec),
-            (f"task_state:{spec.task_id}", TASK_PENDING),
-        ]
-        items.extend((f"lineage:{rid}", spec.task_id)
-                     for rid in spec.return_ids)
+        self.register_tasks((spec,))
+
+    def register_tasks(self, specs: Iterable[TaskSpec],
+                       extra_items: Iterable[Tuple[str, Any]] = ()
+                       ) -> None:
+        """Batched multi-task registration: every spec's spec + state +
+        lineage keys — plus caller-supplied extras (e.g. a compiled
+        graph's invocation record) — land in ONE `put_many` round,
+        acquiring each shard lock at most once. A compiled graph's
+        `execute()` registers its whole invocation through here, so an
+        N-node graph costs one control-plane registration, not N."""
+        items: List[Tuple[str, Any]] = []
+        for spec in specs:
+            items.append((f"task:{spec.task_id}", spec))
+            items.append((f"task_state:{spec.task_id}", TASK_PENDING))
+            items.extend((f"lineage:{rid}", spec.task_id)
+                         for rid in spec.return_ids)
+        items.extend(extra_items)
         self.put_many(items)
 
     def task_spec(self, task_id: str) -> Optional[TaskSpec]:
@@ -291,6 +310,25 @@ class ControlPlane:
             v = (sh.data.get(key) or 0) + 1
             sh.data[key] = v
         return v
+
+    def incr_refs(self, obj_ids: Iterable[str]) -> None:
+        """Batched adoption: one lock pass per shard for a compiled
+        invocation's sink handles (K serial `incr_ref` rounds would sit
+        on the very dispatch path `register_tasks` batches)."""
+        grouped: List[Tuple[_Shard, List[str]]] = []
+        for oid in obj_ids:
+            key = f"refcnt:{oid}"
+            sh = self._shard(key)
+            for g_sh, g_keys in grouped:
+                if g_sh is sh:
+                    g_keys.append(key)
+                    break
+            else:
+                grouped.append((sh, [key]))
+        for sh, keys in grouped:
+            with sh.lock:
+                for key in keys:
+                    sh.data[key] = (sh.data.get(key) or 0) + 1
 
     def decr_ref(self, obj_id: str) -> int:
         key = f"refcnt:{obj_id}"
@@ -393,6 +431,28 @@ class ControlPlane:
         return self.update(f"actor_seq:{actor_id}",
                            lambda v: (v or 0) + 1) - 1
 
+    def reserve_actor_seqs(self, actor_id: str, count: int) -> int:
+        """Reserve a contiguous block of `count` method-sequence numbers
+        in one control-plane round and return the first. A compiled
+        graph reserves every seq its plan needs per invocation up front,
+        so N actor calls cost one ordering op instead of N — the block
+        is totally ordered against concurrent eager callers exactly like
+        individually issued seqs."""
+        return self.update(f"actor_seq:{actor_id}",
+                           lambda v: (v or 0) + count) - count
+
+    def log_actor_calls(self, actor_id: str,
+                        entries: List[Tuple[int, str]]) -> None:
+        """Batched replay-log append: all of a compiled invocation's
+        calls on one actor land under a single shard-lock acquisition
+        (mirrors `log_actor_call`'s in-place O(1) append)."""
+        def append(l):
+            if l is None:
+                return list(entries)
+            l.extend(entries)
+            return l
+        self.update(f"actor_log:{actor_id}", append)
+
     def log_actor_call(self, actor_id: str, seq: int,
                        task_id: str) -> None:
         """Append a method call to the actor's replay log. Callers log
@@ -426,6 +486,25 @@ class ControlPlane:
 
     def actor_checkpoint(self, actor_id: str) -> Optional[Tuple[int, Any]]:
         return self.get(f"actor_ckpt:{actor_id}")
+
+    # --------------------------------------------------------- graph table
+    # Compiled task graphs (dag.py). The static plan is registered once
+    # at compile; each `execute()` writes one `graph_inv:` record — the
+    # epoch table — as part of its batched task registration, so the
+    # control plane can answer "which invocation/epoch produced this
+    # task" for debugging and replay tooling without any extra write on
+    # the dispatch path.
+
+    def register_graph(self, graph_id: str, meta: Dict[str, Any]) -> None:
+        self.put(f"graph:{graph_id}", meta)
+
+    def graph_meta(self, graph_id: str) -> Optional[Dict[str, Any]]:
+        return self.get(f"graph:{graph_id}")
+
+    def graph_invocation(self, inv_id: str) -> Optional[Dict[str, Any]]:
+        """Epoch-table record one `execute()` wrote: graph id, epoch,
+        node count, sink ids (rides the batched registration)."""
+        return self.get(f"graph_inv:{inv_id}")
 
     # ------------------------------------------------------- function table
 

@@ -60,6 +60,14 @@ class ObjectReclaimedError(RuntimeError):
     ``api.free`` was called) and no lineage exists to recompute it."""
 
 
+def _interpreter_finalizing() -> bool:
+    """True once the interpreter is tearing down (or `sys` itself has
+    been cleared from module globals). Split out so ``release`` has one
+    guard point and tests can exercise the finalization path without
+    mutating the process-wide ``sys`` module."""
+    return sys is None or sys.is_finalizing()
+
+
 #: Fixed footprint charged for primitives / interpreter overhead. Chosen
 #: so a stored ``None`` is visibly nonzero (the old ``bytes_of`` returned
 #: 0 for a real ``None`` value, conflating it with a missing object).
@@ -150,13 +158,31 @@ class MemoryManager:
         self.gcs.incr_ref(ref.id)
         object.__setattr__(ref, "_owner", self)
 
+    def adopt_all(self, refs) -> None:
+        """Batched adopt for a compiled invocation's sink handles: all
+        counts land with one lock pass per shard before any handle can
+        be dropped."""
+        self.gcs.incr_refs([r.id for r in refs])
+        for ref in refs:
+            object.__setattr__(ref, "_owner", self)
+
     def release(self, oid: str) -> None:
         """Owning handle dropped. Deferred: just enqueue — never touch a
         lock hierarchy from ``__del__``. One notify per empty→nonempty
         transition: the reclaimer drains in batches, so waking it per
-        object would just burn context switches on the task hot path."""
-        if self._closed:
+        object would just burn context switches on the task hot path.
+
+        Callable from ``__del__`` at any point in the process lifetime:
+        after shutdown (or during interpreter finalization, when the
+        reclaimer thread and the condition variable may already be torn
+        down) it is a silent no-op — a dying process reclaims nothing,
+        and a spurious "Exception ignored in __del__" would be the only
+        possible effect of trying."""
+        if self._closed or _interpreter_finalizing():
             return
+        # no blanket except here: the guards above cover both teardown
+        # cases, ObjectRef.__del__ already swallows exceptions, and a
+        # silent enqueue failure would be an undiagnosable store leak
         with self._reclaim_cv:
             self._queue.append(("rel", oid))
             if len(self._queue) == 1:
@@ -183,11 +209,27 @@ class MemoryManager:
         if not ids:
             return
         with self._pins_lock:
-            if key in self._pins_by_task:
-                return
-            self._pins_by_task[key] = tuple(ids)
-            for oid in ids:
-                self._pin_counts[oid] = self._pin_counts.get(oid, 0) + 1
+            self._pin_locked(key, ids)
+
+    def pin_tasks_with_ids(self, pairs) -> None:
+        """Pin a whole compiled-graph invocation's argument sets under
+        one lock acquisition (execute()-time batching: N pin_task calls
+        would pay N lock round trips on the dispatch hot path). `pairs`
+        is an iterable of (task_key, ref_id_list) — the caller already
+        knows each task's refs, so no argument re-scan happens here."""
+        pairs = [(k, ids) for k, ids in pairs if ids]
+        if not pairs:
+            return
+        with self._pins_lock:
+            for key, ids in pairs:
+                self._pin_locked(key, ids)
+
+    def _pin_locked(self, key: str, ids) -> None:
+        if key in self._pins_by_task:
+            return
+        self._pins_by_task[key] = tuple(ids)
+        for oid in ids:
+            self._pin_counts[oid] = self._pin_counts.get(oid, 0) + 1
 
     def pins(self, oid: str) -> int:
         with self._pins_lock:

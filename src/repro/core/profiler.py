@@ -20,16 +20,23 @@ def task_timeline(gcs: ControlPlane) -> Dict[str, List]:
 
 
 def summarize(gcs: ControlPlane) -> Dict[str, float]:
-    """Aggregate scheduling + memory-governance metrics from the event
-    log. The eviction/reclaim counters come from the data plane's new
-    event kinds: ``evict`` (LRU eviction under store pressure, with the
-    freed byte count), ``reclaim`` (refcount-zero GC collection), and
-    ``reconstruct`` events tagged ``after_evict`` (lineage replay
-    repairing an evicted-but-still-referenced object)."""
+    """Aggregate scheduling + memory-governance + compiled-graph metrics
+    from the event log. The eviction/reclaim counters come from the data
+    plane's event kinds: ``evict`` (LRU eviction under store pressure,
+    with the freed byte count), ``reclaim`` (refcount-zero GC
+    collection), and ``reconstruct`` events tagged ``after_evict``
+    (lineage replay repairing an evicted-but-still-referenced object).
+    Graph counters come from the dag layer: ``graph_compile`` (plans
+    built), ``graph_execute`` (invocations, each carrying the size of
+    its single batched registration), and ``graph_chain`` (dependents
+    executed inline on the finishing worker, never re-entering the
+    scheduler)."""
     raw = gcs.events()
     tl: Dict[str, List] = defaultdict(list)
     evictions = reclaims = reconstructs_after_evict = 0
     bytes_freed = 0
+    graph_compiles = graph_invocations = graph_chained = 0
+    graph_batched_tasks = 0
     for t, kind, task_id, where, extra in raw:
         tl[task_id].append((t, kind, where, extra))
         if kind == "evict":
@@ -40,6 +47,13 @@ def summarize(gcs: ControlPlane) -> Dict[str, float]:
             bytes_freed += extra.get("bytes", 0)
         elif kind == "reconstruct" and extra.get("after_evict"):
             reconstructs_after_evict += 1
+        elif kind == "graph_compile":
+            graph_compiles += 1
+        elif kind == "graph_execute":
+            graph_invocations += 1
+            graph_batched_tasks += extra.get("nodes", 0)
+        elif kind == "graph_chain":
+            graph_chained += 1
     submit_to_start, run_times, spills, locals_ = [], [], 0, 0
     for task_id, events in tl.items():
         events.sort()
@@ -68,6 +82,11 @@ def summarize(gcs: ControlPlane) -> Dict[str, float]:
         "reclaims": reclaims,
         "bytes_freed": float(bytes_freed),
         "reconstruct_after_evict": reconstructs_after_evict,
+        "graph_compiles": graph_compiles,
+        "graph_invocations": graph_invocations,
+        "graph_batched_tasks_mean": (graph_batched_tasks
+                                     / max(graph_invocations, 1)),
+        "graph_inline_chained": graph_chained,
     }
 
 

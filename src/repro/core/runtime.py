@@ -292,6 +292,12 @@ class Cluster:
         self._unschedulable: List[TaskSpec] = []
         self._unschedulable_actors: List[Tuple[ActorSpec, int]] = []
         self._unsched_lock = threading.Lock()
+        # live compiled-graph invocations: inv_id -> _GraphInvocation
+        # (dag.py). Holds each invocation's dependency counters until
+        # its last node completes; workers consult it to release
+        # plan-order dependents without a dataflow-gate pass.
+        self._graph_invs: Dict[str, Any] = {}
+        self._graph_lock = threading.Lock()
         self.nodes: List[Node] = []
         res = resources_per_node or {"cpu": float(workers_per_node)}
         self._node_defaults = (workers_per_node, spill_threshold,
@@ -334,10 +340,12 @@ class Cluster:
         context on the chosen node. An actor no live node can host parks
         — like an unschedulable task — and is placed when capacity joins
         (method calls submitted meanwhile are logged and replayed)."""
-        self.gcs.register_actor(aspec)
         # ctor args stay pinned for the actor's life: a restart replays
         # the constructor, which must still be able to resolve them
+        # (pin before the actor becomes visible — same borrow/pin
+        # ordering rule as submit)
         self.memory.pin_task(aspec.actor_id, aspec)
+        self.gcs.register_actor(aspec)
         try:
             node = self.global_scheduler.place_actor(aspec)
         except UnschedulableActorError:
@@ -426,6 +434,170 @@ class Cluster:
         for aspec, from_nid in parked:
             self._relocate_actor(aspec, from_nid)
 
+    # ------------------------------------------------------ compiled graphs
+
+    def graph_register_invocation(self, inv) -> None:
+        with self._graph_lock:
+            self._graph_invs[inv.inv_id] = inv
+
+    def _graph_inv(self, inv_id: Optional[str]):
+        if inv_id is None:
+            return None
+        with self._graph_lock:
+            return self._graph_invs.get(inv_id)
+
+    def graph_planned(self, spec: TaskSpec) -> Optional[int]:
+        inv = self._graph_inv(spec.graph_inv)
+        if inv is None or spec.graph_idx < 0:
+            return None
+        return inv.planned[spec.graph_idx]
+
+    def _available_for_dispatch(self, node: Node, oid: str) -> bool:
+        """The dataflow-availability rule graph dispatch applies before
+        skipping the gate: resident in the target's store, or located
+        somewhere the worker's resolve() can fetch it from. One
+        definition for chainability, per-node dispatch, and grouped
+        root dispatch."""
+        return node.store.contains(oid) or bool(self.gcs.locations(oid))
+
+    def graph_chainable(self, spec: TaskSpec, node: "Node") -> bool:
+        """Whether a ready dependent may run inline on `node`'s current
+        worker thread: planned here AND no still-unavailable external
+        dependency — inlining past a pending external would park the
+        worker in a blocking fetch (the same rule graph_dispatch
+        enforces via the gated submit)."""
+        inv = self._graph_inv(spec.graph_inv)
+        if inv is None or spec.graph_idx < 0:
+            return False
+        if inv.planned[spec.graph_idx] != node.node_id:
+            return False
+        ext = inv.externals[spec.graph_idx]
+        return not ext or all(self._available_for_dispatch(node, oid)
+                              for oid in ext)
+
+    def graph_ready_after(self, spec: TaskSpec) -> Tuple[TaskSpec, ...]:
+        """A compiled-graph node reached DONE: decrement its dependents'
+        pending-edge counters and return the specs whose last edge this
+        completion satisfied — the caller dispatches (or inline-chains)
+        them. Idempotent per node (lineage replay can complete a node
+        twice), and the invocation's bookkeeping is dropped when its
+        final node completes."""
+        inv = self._graph_inv(spec.graph_inv)
+        if inv is None:
+            return ()
+        with inv.lock:
+            if spec.graph_idx in inv.done:
+                return ()
+            inv.done.add(spec.graph_idx)
+            inv.remaining -= 1
+            finished = inv.remaining == 0
+            ready = []
+            for d in inv.dependents[spec.graph_idx]:
+                inv.pending[d] -= 1
+                if inv.pending[d] == 0:
+                    ready.append(inv.specs[d])
+        if finished:
+            with self._graph_lock:
+                self._graph_invs.pop(inv.inv_id, None)
+            self.gcs.log_event("graph_done", inv.inv_id, "cluster")
+        return tuple(ready)
+
+    def graph_dispatch(self, spec: TaskSpec) -> None:
+        """Route one ready compiled-graph node: straight to its planned
+        node's `submit_ready` (plan order already satisfied its
+        intra-graph edges — no second dataflow pass), with an eager
+        cross-node argument push; a dead/unavailable planned node falls
+        back to a gated entry on a live node. Nodes that also depend on
+        *external* futures (eager refs bound into the graph) take the
+        gated `submit` when any is still unavailable — a worker must
+        not park in a blocking fetch for an edge the plan never
+        covered. (Ready deps are always plain tasks: actor calls are
+        mailbox-delivered up front at execute() and never re-dispatch
+        here.)"""
+        inv = self._graph_inv(spec.graph_inv)   # one lock pass: planned
+        planned = (inv.planned[spec.graph_idx]  # + externals both come
+                   if inv is not None and spec.graph_idx >= 0 else None)
+        if (planned is not None and planned < len(self.nodes)
+                and self.nodes[planned].alive):
+            node = self.nodes[planned]
+            ext = inv.externals[spec.graph_idx]
+            if not node.satisfies_steady(spec.resources):
+                # stale plan: a standing actor grant placed after
+                # compile covers this node's capacity for good — a
+                # force-local backlog would starve, so re-enter through
+                # a gated live-node submit (which spills onward)
+                self._graph_fallback_submit(spec)
+                return
+            if ext and any(not self._available_for_dispatch(node, oid)
+                           for oid in ext):
+                node.local_scheduler.submit(spec, force_local=True)
+                return
+            node.prefetch_args(spec)
+            node.local_scheduler.submit_ready(spec)
+        else:
+            self._graph_fallback_submit(spec)
+
+    def _graph_fallback_submit(self, spec: TaskSpec) -> None:
+        """Planned node dead (or the compile-time plan found none):
+        enter through a live node's *gated* submit, never straight into
+        global placement — `place()` hands specs to `submit_ready`,
+        which assumes the dataflow gate already ran, and this spec's
+        external deps may still be pending. The local scheduler spills
+        onward (gate satisfied) if the entry node can't host it."""
+        live = self.live_nodes()
+        if live:
+            live[spec.graph_idx % len(live)].local_scheduler.submit(spec)
+        else:
+            self.global_scheduler.submit(spec)  # parks: no live nodes
+
+    def graph_dispatch_roots(self, planned: Optional[int],
+                             specs: List[TaskSpec]) -> None:
+        """Grouped per-planned-node handoff for an invocation's root
+        nodes (one scheduler-lock pass admits the group). A root whose
+        *external* dependencies (eager futures passed into bind/execute)
+        are not yet available goes through the normal gated `submit`
+        instead — intra-graph edges never need the gate, external ones
+        still might."""
+        if (planned is None or planned >= len(self.nodes)
+                or not self.nodes[planned].alive):
+            for spec in specs:
+                self._graph_fallback_submit(spec)
+            return
+        node = self.nodes[planned]
+        batch: List[TaskSpec] = []
+        for spec in specs:
+            deps = _ref_ids(spec)
+            if deps and any(not self._available_for_dispatch(node, oid)
+                            for oid in deps):
+                node.local_scheduler.submit(spec, force_local=True)
+            else:
+                batch.append(spec)
+                if deps:
+                    node.prefetch_args(spec)
+        if batch:
+            node.local_scheduler.submit_ready_batch(batch)
+
+    def graph_on_lost(self, spec: TaskSpec) -> None:
+        """A compiled-graph task died with its node (LOST): replay it
+        via lineage immediately. Eager tasks recover lazily when a
+        blocked fetcher notices; a graph intermediate may have no
+        fetcher at all — its dependents are gated on the invocation's
+        counters, not on pub-sub — so the loss must trigger the
+        resubmit itself. The LOST→PENDING transition is atomic; only
+        the winner replays (mirrors maybe_reconstruct)."""
+        won: List[int] = []
+
+        def trans(s):
+            if s == TASK_LOST:
+                won.append(1)
+                return TASK_PENDING
+            return s
+
+        self.gcs.update(f"task_state:{spec.task_id}", trans)
+        if won:
+            self.gcs.log_event("graph_replay", spec.task_id, "lineage")
+            self.resubmit(spec)
+
     # ------------------------------------------------------------ fetching
 
     def fetch(self, obj_id: str, prefer_node: Optional[int] = None,
@@ -510,6 +682,14 @@ class Cluster:
                 return self._try_actor_inline(spec)
             finally:
                 _steal_ctx.depth = depth
+        # compiled-graph tasks: the target may be undispatched (held by
+        # the invocation's dependency counters) while an *ancestor* from
+        # the same invocation sits in a run queue — stealing any queued
+        # task of the invocation advances the chain toward the target,
+        # and inline chaining in execute_task usually runs the whole
+        # remainder on this thread (zero handoffs for the graph case,
+        # like the single-task steal)
+        graph_inv = spec.graph_inv if spec is not None else None
         for node in self.nodes:
             if not node.alive:
                 continue
@@ -519,14 +699,21 @@ class Cluster:
                 for i, s in enumerate(q.queue):
                     if i >= _MAX_STEAL_SCAN:
                         break
-                    if s is not None and s.task_id == task_id:
+                    if s is not None and (
+                            s.task_id == task_id
+                            or (graph_inv is not None
+                                and s.graph_inv == graph_inv)):
                         spec = s
                         break
                 if spec is not None:
                     q.queue.remove(spec)
             if spec is None:
                 continue
-            self.gcs.log_event("steal", task_id, f"node{node.node_id}")
+            # log the spec actually pulled from the queue — for a graph
+            # steal it may be an ancestor of the get() target, and the
+            # timeline must attribute the inline run to the task that ran
+            self.gcs.log_event("steal", spec.task_id,
+                               f"node{node.node_id}")
             _steal_ctx.depth = depth + 1
             try:
                 execute_task(node, spec, "steal")
@@ -640,10 +827,20 @@ class Cluster:
                 self.gcs.update(f"obj:{oid}",
                                 lambda s: (s or frozenset()) - dead)
                 self.maybe_reconstruct(oid)
-        target = (self.nodes[spec.submitter_node]
-                  if spec.submitter_node < len(self.nodes)
-                  and self.nodes[spec.submitter_node].alive
-                  else self.live_nodes()[0])
+        if (spec.submitter_node < len(self.nodes)
+                and self.nodes[spec.submitter_node].alive):
+            target = self.nodes[spec.submitter_node]
+        else:
+            live = self.live_nodes()
+            if not live:
+                # whole cluster down: park instead of crashing — the
+                # task is already PENDING, so without this it would
+                # hang unqueued forever (graph dependents gate on
+                # invocation counters, not pub-sub, and would never
+                # notice). add_node/restart_node drains the park.
+                self.park_unschedulable(spec)
+                return
+            target = live[0]
         target.local_scheduler.submit(spec)
 
     def _drain_dead_node(self, node: Node) -> List[TaskSpec]:

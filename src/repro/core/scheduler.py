@@ -197,6 +197,40 @@ class LocalScheduler:
         correctness barrier.)"""
         self._schedule_ready(spec, force_local=True)
 
+    def submit_ready_batch(self, specs: List[TaskSpec]) -> None:
+        """Grouped handoff for a compiled graph's co-planned ready
+        nodes: one lock acquisition admits the whole group (acquire +
+        dispatch, or backlog), instead of one `_schedule_ready` pass
+        per task. The compile-time plan can be stale — an actor
+        reservation landed after compile may cover this node's capacity
+        permanently — so specs that no longer fit *steady-state*
+        capacity go back to the global scheduler for a fresh placement
+        instead of starving in the backlog. Dead node: the whole group
+        re-places."""
+        node = self.node
+        if not node.alive:
+            for spec in specs:
+                node.cluster.global_scheduler.submit(spec)
+            return
+        dispatch: List[TaskSpec] = []
+        replace: List[TaskSpec] = []
+        with self._lock:
+            for spec in specs:
+                if node.try_acquire(spec.resources):
+                    dispatch.append(spec)
+                elif node.satisfies_steady(spec.resources):
+                    self._backlog.append(spec)
+                else:
+                    replace.append(spec)
+        for spec in dispatch:
+            self.gcs.log_event("sched_local", spec.task_id,
+                               f"node{node.node_id}")
+            node.dispatch(spec)
+        for spec in replace:
+            self.gcs.log_event("spill", spec.task_id,
+                               f"node{node.node_id}", stale_plan=True)
+            node.cluster.global_scheduler.submit(spec)
+
     def _schedule_ready(self, spec: TaskSpec, force_local: bool) -> None:
         node = self.node
         if not node.alive or not node.satisfies(spec.resources):
@@ -356,6 +390,27 @@ class GlobalScheduler:
                            f"node{best.node_id}")
         best.prefetch_args(spec)
         best.local_scheduler.submit_ready(spec)
+
+    def plan_node(self, spec: TaskSpec,
+                  affinity: Optional[dict] = None) -> Optional[int]:
+        """Compile-time placement for one compiled-graph node: the same
+        `_select_node` scoring a spilled task gets (locality + load +
+        memory pressure), plus a graph-affinity bonus toward the nodes
+        its dependencies were planned on — chains co-reside so the
+        worker's inline chaining applies. Returns a node_id (the static
+        plan), or None when no live node currently satisfies the
+        request (execute falls back to normal global placement, which
+        parks if still unschedulable)."""
+        extra = None
+        if affinity:
+            extra = lambda n: affinity.get(n.node_id, 0.0)  # noqa: E731
+        with self._locks[hash(spec.task_id) % len(self._locks)]:
+            best = self._select_node(spec, extra)
+        if best is not None:
+            self.gcs.log_event("graph_plan", spec.task_id,
+                               f"node{best.node_id}")
+            return best.node_id
+        return None
 
     def place_actor(self, aspec) -> "Node":
         """Choose the node an actor lives on: the shared placement policy

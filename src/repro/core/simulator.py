@@ -36,6 +36,11 @@ class SimCosts:
     gcs_op_s: float = 3e-6           # control-plane write
     actor_call_s: float = 20e-6      # seq issue + log + mailbox dispatch
     evict_s: float = 5e-6            # LRU eviction / GC reclaim per object
+    graph_dispatch_s: float = 30e-6  # compiled-graph invocation: one
+                                     # batched registration + grouped
+                                     # root handoff (charged once per
+                                     # execute; chained nodes then run
+                                     # with no per-task scheduling cost)
 
     @classmethod
     def from_microbench(cls, path: str = "BENCH_core.json",
@@ -95,12 +100,25 @@ class SimCosts:
                 evict = max(churn["reclaim_us"]["p50_us"] * us, 1e-7)
             except (KeyError, TypeError):  # pragma: no cover
                 pass
+        # compiled-graph dispatch: the graph_step A/B measures a 3-node
+        # compiled chain end to end — the per-invocation batched
+        # dispatch overhead is what it costs beyond one plain local
+        # round trip (absent from pre-dag runs)
+        graph_dispatch = cls.graph_dispatch_s
+        gstep = data.get("graph_step")
+        if isinstance(gstep, dict):
+            try:
+                graph_dispatch = max(
+                    gstep["compiled"]["p50_us"] * us - e2e, 1e-6)
+            except (KeyError, TypeError):  # pragma: no cover
+                pass
         return cls(local_sched_s=max(submit, 1e-7),
                    global_sched_s=max(submit + 2 * gcs_op, 2e-7),
                    worker_overhead_s=worker,
                    gcs_op_s=max(gcs_op, 1e-8),
                    actor_call_s=actor,
-                   evict_s=evict)
+                   evict_s=evict,
+                   graph_dispatch_s=graph_dispatch)
 
 
 @dataclass
@@ -117,6 +135,9 @@ class SimTask:
     attempts: int = 0
     actor_id: int = -1               # >= 0: a method call on that actor
     output_bytes: int = 0            # store occupancy charged at finish
+    chain: Optional["SimTask"] = None  # compiled-graph successor: runs
+                                       # inline on the finishing node
+                                       # (no scheduling event)
 
 
 class SimActor:
@@ -231,6 +252,24 @@ class ClusterSim:
         task.submit_t = at
         self._seq += 1
         heapq.heappush(self._eq, (at, self._seq, "submit", task))
+
+    def submit_chain(self, tasks: List[SimTask], at: float = 0.0) -> None:
+        """Compiled-graph invocation: the whole chain is dispatched in
+        one batched round (a single `graph_dispatch_s` charge on the
+        head) and successors run inline on the finishing node with no
+        per-task scheduling event — the DES model of `execute()` +
+        worker inline chaining."""
+        head, rest = tasks[0], tasks[1:]
+        prev = head
+        for t in rest:
+            t.submit_node = head.submit_node
+            t.submit_t = at
+            prev.chain = t
+            prev = t
+        head.submit_t = at
+        self._seq += 1
+        heapq.heappush(self._eq, (at + self.costs.graph_dispatch_s,
+                                  self._seq, "submit", head))
 
     # ------------------------------------------------------------- actors
 
@@ -383,6 +422,17 @@ class ClusterSim:
         # store the output; evictions under pressure delay the node's
         # next dispatch by the calibrated per-object eviction cost
         _, evict_delay = node.store_put(task, self.costs.evict_s)
+        # compiled-graph chaining: the successor starts on this node
+        # immediately (no scheduling event, no local_sched_s) — falls
+        # back to normal submission if the node can't grant it now
+        nxt = task.chain
+        if nxt is not None:
+            if node.alive and node.can_run(nxt):
+                node.acquire(nxt)
+                self._start(node, nxt, evict_delay, "chain")
+            else:
+                nxt.submit_node = node.node_id
+                self._push(0.0, "submit", nxt)
         while node.backlog:
             nxt = next((t for t in node.backlog if node.can_run(t)), None)
             if nxt is None:

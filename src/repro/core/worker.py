@@ -49,14 +49,35 @@ def execute_task(node: "Node", spec: TaskSpec, who: str) -> None:
     """Run one dispatched task to completion on the calling thread —
     shared by worker threads and the work-stealing get() fast path. The
     caller must own the task's resource grant (the local scheduler
-    acquired it before enqueue); this function releases it. The worker
-    context is saved/restored so a thief thread keeps its own identity
-    afterwards."""
+    acquired it before enqueue); this function releases it.
+
+    Compiled-graph inline chaining: when the finished task's completion
+    satisfies the last dependency edge of a node planned on this same
+    node, the dependent runs immediately on this thread — no run-queue
+    round trip, no scheduler pass, no worker wakeup. Cross-node (or
+    resource-contended) dependents are routed through the plan's
+    `submit_ready` path instead."""
+    nxt = _execute_one(node, spec, who)
+    while nxt is not None:
+        node.gcs.log_event("graph_chain", nxt.task_id,
+                           f"node{node.node_id}/{who}")
+        nxt = _execute_one(node, nxt, who)
+
+
+def _execute_one(node: "Node", spec: TaskSpec,
+                 who: str) -> Optional[TaskSpec]:
+    """One task, start to finish; returns a same-node compiled-graph
+    dependent to chain into (resources already acquired), or None. The
+    worker context is saved/restored so a thief thread keeps its own
+    identity afterwards."""
     gcs = node.gcs
+    cluster = node.cluster
     prev_node = getattr(_worker_ctx, "node", None)
     prev_spec = getattr(_worker_ctx, "spec", None)
     _worker_ctx.node = node
     _worker_ctx.spec = spec
+    ready = ()
+    nxt: Optional[TaskSpec] = None
     try:
         gcs.set_task_state(spec.task_id, TASK_RUNNING)
         gcs.log_event("start", spec.task_id,
@@ -73,7 +94,9 @@ def execute_task(node: "Node", spec: TaskSpec, who: str) -> None:
             # GC hook: unpin args, collect fire-and-forget outputs whose
             # handles were already dropped (LOST paths keep their pins —
             # the resubmit still depends on the args)
-            node.cluster.memory.on_task_done(spec)
+            cluster.memory.on_task_done(spec)
+            if spec.graph_inv is not None:
+                ready = cluster.graph_ready_after(spec)
             gcs.log_event("finish", spec.task_id,
                           f"node{node.node_id}/{who}")
         else:
@@ -83,6 +106,10 @@ def execute_task(node: "Node", spec: TaskSpec, who: str) -> None:
             # (no polling fallback exists)
             for rid in spec.return_ids:
                 gcs.notify_lost(rid)
+            if spec.graph_inv is not None:
+                # graph intermediates may have no fetcher to trigger the
+                # replay — the loss itself must resubmit
+                cluster.graph_on_lost(spec)
     except Exception:  # noqa: BLE001
         if node.alive:  # mirror the success path's liveness check
             err = TaskError(
@@ -91,7 +118,11 @@ def execute_task(node: "Node", spec: TaskSpec, who: str) -> None:
             for rid in spec.return_ids:
                 node.store.put(rid, err)
             gcs.set_task_state(spec.task_id, TASK_DONE)
-            node.cluster.memory.on_task_done(spec)
+            cluster.memory.on_task_done(spec)
+            if spec.graph_inv is not None:
+                # error propagation matches eager: dependents run and
+                # receive the stored TaskError as their argument value
+                ready = cluster.graph_ready_after(spec)
             gcs.log_event("error", spec.task_id,
                           f"node{node.node_id}/{who}")
         else:
@@ -103,11 +134,26 @@ def execute_task(node: "Node", spec: TaskSpec, who: str) -> None:
                           f"node{node.node_id}/{who}", lost=True)
             for rid in spec.return_ids:
                 gcs.notify_lost(rid)
+            if spec.graph_inv is not None:
+                cluster.graph_on_lost(spec)
     finally:
         _worker_ctx.node = prev_node
         _worker_ctx.spec = prev_spec
         node.release(spec.resources)
+        # pick at most one same-node dependent to chain into (acquire
+        # its grant before the backlog can claim the freed resources);
+        # everything else — including deps with a still-pending
+        # external future, which must take the gated dispatch — goes
+        # through the plan's dispatch path
+        for dep in ready:
+            if (nxt is None and node.alive and dep.actor_id is None
+                    and cluster.graph_chainable(dep, node)
+                    and node.try_acquire(dep.resources)):
+                nxt = dep
+            else:
+                cluster.graph_dispatch(dep)
         node.local_scheduler.on_worker_free()
+    return nxt
 
 
 class ActorContext(threading.Thread):
@@ -240,6 +286,7 @@ class ActorContext(threading.Thread):
                     node.store.put(rid, val)
                 gcs.set_task_state(spec.task_id, TASK_DONE)
                 node.cluster.memory.on_task_done(spec)
+                self._graph_release(spec)
                 gcs.log_event("actor_finish", spec.task_id,
                               f"node{node.node_id}/{who}")
                 self._maybe_checkpoint(spec.actor_seq + 1)
@@ -256,6 +303,7 @@ class ActorContext(threading.Thread):
                     node.store.put(rid, err)
                 gcs.set_task_state(spec.task_id, TASK_DONE)
                 node.cluster.memory.on_task_done(spec)
+                self._graph_release(spec)
                 gcs.log_event("actor_method_error", spec.task_id,
                               f"node{node.node_id}/{who}")
             else:
@@ -267,6 +315,17 @@ class ActorContext(threading.Thread):
         finally:
             _worker_ctx.node = prev_node
             _worker_ctx.spec = prev_spec
+
+    def _graph_release(self, spec: TaskSpec) -> None:
+        """A compiled-graph actor call completed: release its plain-task
+        dependents through the plan's dispatch path. Never inline on the
+        actor's execution mutex — a chained task here would stall every
+        later method call behind it."""
+        if spec.graph_inv is None:
+            return
+        cluster = self.node.cluster
+        for dep in cluster.graph_ready_after(spec):
+            cluster.graph_dispatch(dep)
 
     def _maybe_checkpoint(self, next_seq: int) -> None:
         """Persist `__getstate__` to the control plane every

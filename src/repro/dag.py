@@ -1,0 +1,13 @@
+"""Top-level alias for the compiled task-graph API: ``repro.dag``.
+
+    from repro import core, dag
+
+    node = my_fn.bind(dag.input(0))
+    cg = dag.compile(node)
+    ref = cg.execute(x)
+
+See ``repro.core.dag`` for the implementation and ``repro.core.api``'s
+"Compiled graphs" section for the programming model.
+"""
+from repro.core.dag import (CompiledGraph, GraphNode,  # noqa: F401
+                            GraphOutput, InputNode, compile, input)

@@ -239,3 +239,95 @@ def test_options_respects_falsy_overrides(cluster):
     g = f.options(num_returns=2)
     assert g.resources == f.resources and g.num_returns == 2
     assert f.options().num_returns == 1
+
+
+# ------------------------------- submit-time borrow/pin ordering (PR 5)
+
+def test_args_pinned_before_task_is_registered(cluster):
+    """The PR 5 audit: submit() must pin a task's ObjectRef arguments
+    BEFORE the task becomes visible in the control plane. With
+    registration first, a concurrent drop of the argument's last owning
+    handle in the gap let the reclaimer collect it out from under the
+    not-yet-pinned task."""
+    ref = core.put(41)
+    mm = cluster.memory
+    gcs = cluster.gcs
+    pins_at_registration = []
+    orig = gcs.register_task
+
+    def checking(spec):
+        pins_at_registration.append(mm.pins(ref.id))
+        return orig(spec)
+
+    @core.remote
+    def f(x):
+        return x + 1
+
+    gcs.register_task = checking
+    try:
+        assert core.get(f.submit(ref)) == 42
+    finally:
+        gcs.register_task = orig
+    assert pins_at_registration and pins_at_registration[0] >= 1, (
+        "task was registered before its arguments were pinned")
+
+
+def test_actor_call_args_pinned_before_registration(cluster):
+    @core.remote
+    class Echo:
+        def echo(self, x):
+            return x
+
+    h = Echo.submit()
+    ref = core.put("payload")
+    mm = cluster.memory
+    gcs = cluster.gcs
+    pins_at_registration = []
+    orig = gcs.register_task
+
+    def checking(spec):
+        pins_at_registration.append(mm.pins(ref.id))
+        return orig(spec)
+
+    gcs.register_task = checking
+    try:
+        assert core.get(h.echo.submit(ref)) == "payload"
+    finally:
+        gcs.register_task = orig
+    assert pins_at_registration and pins_at_registration[0] >= 1
+
+
+# ------------------------- ObjectRef.__del__ at teardown (PR 5)
+
+def test_ref_del_after_shutdown_is_silent():
+    """Dropping a lingering owning handle after shutdown() (reclaim
+    queue torn down) must be a silent no-op, not a spurious error."""
+    core.init(num_nodes=1, workers_per_node=1)
+    ref = core.put(1)
+    core.shutdown()
+    ref.__del__()          # explicit: exercises the guarded path
+    del ref                # and the real drop
+
+
+def test_release_is_noop_during_interpreter_finalization(cluster):
+    """__del__ can fire while the interpreter is finalizing — release()
+    must bail out before touching the (possibly torn down) condition
+    variable instead of surfacing 'Exception ignored in __del__'.
+    Patches the module's guard seam, not the process-wide sys module
+    (which live cluster threads also read)."""
+    from repro.core import memory
+    mm = cluster.memory
+    ref = core.put(2)
+    oid = ref.id
+    real = memory._interpreter_finalizing
+    memory._interpreter_finalizing = lambda: True
+    try:
+        before = len(mm._queue)
+        mm.release(oid)    # what __del__ would call
+        assert len(mm._queue) == before, (
+            "release() queued work during interpreter finalization")
+        ref.__del__()      # full __del__ path: also a silent no-op
+        assert len(mm._queue) == before
+    finally:
+        memory._interpreter_finalizing = real
+    object.__setattr__(ref, "_owner", None)  # neutralize the real drop

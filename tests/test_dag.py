@@ -1,0 +1,569 @@
+"""Compiled task graphs: bind()/compile()/execute() — graph
+construction, single batched registration, grouped dispatch + inline
+chaining, actor-seq reservation ordering, interop with get/wait/free,
+failure semantics (TaskError propagation + mid-invocation node kill
+matching the eager path), intermediate GC, and the DES dispatch model."""
+import threading
+import time
+
+import pytest
+
+from repro import core, dag
+from repro.core.api import ObjectRef
+from repro.core.worker import TaskError
+
+
+@pytest.fixture()
+def cluster():
+    c = core.init(num_nodes=2, workers_per_node=2)
+    yield c
+    core.shutdown()
+
+
+@core.remote
+def inc(x):
+    return x + 1
+
+
+@core.remote
+def add(a, b):
+    return a + b
+
+
+# ------------------------------------------------------ graph building
+
+def test_bind_is_lazy(cluster):
+    node = inc.bind(inc.bind(1))
+    assert isinstance(node, core.GraphNode)
+    # nothing was registered or scheduled
+    kinds = {e[1] for e in cluster.gcs.events()}
+    assert "submit" not in kinds and "sched_local" not in kinds
+
+
+def test_chain_and_epochs(cluster):
+    cg = dag.compile(inc.bind(inc.bind(inc.bind(dag.input(0)))))
+    assert core.get(cg.execute(0)) == 3
+    assert core.get(cg.execute(39)) == 42
+    # repeated executes are epoch-tagged invocations of one plan
+    invs = [e for e in cluster.gcs.events() if e[1] == "graph_execute"]
+    assert len(invs) == 2
+    assert [e[4]["epoch"] for e in invs] == [0, 1]
+    rec = cluster.gcs.graph_invocation(invs[1][2])
+    assert rec is not None and rec["epoch"] == 1 and rec["nodes"] == 3
+
+
+def test_diamond_and_kwargs(cluster):
+    @core.remote
+    def affine(x, scale=1, shift=0):
+        return x * scale + shift
+
+    a = inc.bind(dag.input(0))
+    sink = add.bind(affine.bind(a, scale=10),
+                    affine.bind(a, shift=dag.input(1)))
+    cg = dag.compile(sink)
+    # a=3; 3*10 + (3+100) = 133
+    assert core.get(cg.execute(2, 100)) == 133
+
+
+def test_multi_output_and_list_outputs(cluster):
+    @core.remote(num_returns=2)
+    def divmod_(a, b):
+        return a // b, a % b
+
+    p = divmod_.bind(dag.input(0), 10)
+    cg = dag.compile([p[0], p[1], inc.bind(p[0])])
+    assert core.get(cg.execute(47)) == [4, 7, 5]
+
+
+def test_multi_return_output_needs_selection(cluster):
+    @core.remote(num_returns=2)
+    def two(x):
+        return x, x
+
+    with pytest.raises(TypeError, match="select"):
+        dag.compile(two.bind(1))
+
+
+def test_deep_nesting_rejected(cluster):
+    with pytest.raises(TypeError, match="nested|inside"):
+        inc.bind({"x": dag.input(0)})
+    with pytest.raises(TypeError, match="nested|inside"):
+        inc.bind([[inc.bind(1)]])
+
+
+def test_multi_return_bare_argument_rejected(cluster):
+    @core.remote(num_returns=2)
+    def two(x):
+        return x, x
+
+    with pytest.raises(TypeError, match="select one"):
+        inc.bind(two.bind(1))
+    with pytest.raises(TypeError, match="select one"):
+        add.bind(1, [two.bind(1)])
+
+
+def test_input_refs_in_containers_are_borrowed_and_collected(cluster):
+    """execute() inputs holding ObjectRefs inside a list must land in
+    the task table as borrows (the caller's owning handles must not be
+    captured — that would pin the refcount forever) and be released for
+    GC once the invocation is done."""
+    @core.remote
+    def total(xs):
+        return sum(xs)
+
+    cg = dag.compile(total.bind(dag.input(0)))
+    r1, r2 = core.put(4), core.put(5)
+    sink = cg.execute([r1, r2])
+    assert core.get(sink) == 9
+    spec = cluster.gcs.task_spec(sink.id.rsplit(".r", 1)[0])
+    stored = spec.args[0]
+    assert all(e is not r1 and e is not r2 for e in stored)
+    assert all("_owner" not in e.__dict__ for e in stored
+               if isinstance(e, ObjectRef))
+    # dropping the caller's handles reclaims the objects: nothing in
+    # the immortal task table holds a count
+    oid = r1.id
+    del r1, r2
+    assert cluster.memory.wait_reclaimed(oid, timeout=5)
+    # refs nested deeper than resolution reaches are rejected loudly
+    with pytest.raises(TypeError, match="nested"):
+        cg.execute({"refs": [core.put(1)]})
+
+
+def test_dead_planned_node_fallback_still_gates_externals():
+    """Kill the planned node before execute(): the fallback must enter
+    through a gated submit, so a root bound to a still-pending eager
+    future waits instead of parking a worker in a blocking fetch."""
+    c = core.init(num_nodes=2, workers_per_node=2)
+    try:
+        release = threading.Event()
+
+        @core.remote
+        def slow_src():
+            release.wait(5)
+            return 6
+
+        cg = dag.compile(inc.bind(dag.input(0)))
+        planned = c.gcs.graph_meta(cg.graph_id)["planned"][0]
+        c.kill_node(planned)
+        src = slow_src.submit()
+        ref = cg.execute(src)
+        time.sleep(0.05)
+        release.set()
+        assert core.get(ref, timeout=10) == 7
+    finally:
+        core.shutdown()
+
+
+def test_external_refs_and_container_args(cluster):
+    @core.remote
+    def total(xs):
+        return sum(xs)
+
+    ext = core.put(5)
+    cg = dag.compile(total.bind([ext, dag.input(0), inc.bind(2), 7]))
+    assert core.get(cg.execute(10)) == 5 + 10 + 3 + 7
+
+
+def test_external_pending_future_gates_non_root(cluster):
+    """A NON-root node mixing an intra-graph edge with a still-pending
+    eager future must go through the dataflow gate at dispatch (not
+    park a worker in a blocking fetch)."""
+    release = threading.Event()
+
+    @core.remote
+    def slow_src():
+        release.wait(5)
+        return 100
+
+    src = slow_src.submit()
+    sink = add.bind(inc.bind(dag.input(0)), src)
+    cg = dag.compile(sink)
+    ref = cg.execute(1)
+    time.sleep(0.05)
+    release.set()
+    assert core.get(ref, timeout=10) == 102
+
+
+def test_external_pending_future_gates_root(cluster):
+    """A root whose external dependency is a still-pending eager future
+    must wait for it (gated submit), not crash or run early."""
+    release = threading.Event()
+
+    @core.remote
+    def slow_src():
+        release.wait(5)
+        return 8
+
+    src = slow_src.submit()
+    cg = dag.compile(inc.bind(dag.input(0)))
+    ref = cg.execute(src)
+    time.sleep(0.05)
+    release.set()
+    assert core.get(ref, timeout=10) == 9
+
+
+# ------------------------------------------- batched one-round dispatch
+
+def test_execute_single_batched_registration(cluster):
+    """The acceptance bar: one control-plane registration round per
+    invocation, regardless of graph size."""
+    a = inc.bind(dag.input(0))
+    cg = dag.compile(add.bind(inc.bind(a), a))
+    gcs = cluster.gcs
+    put_many_calls, register_task_calls = [], []
+    orig_pm, orig_rt = gcs.put_many, gcs.register_task
+    gcs.put_many = lambda items: (put_many_calls.append(1), orig_pm(items))[1]
+    gcs.register_task = lambda s: (register_task_calls.append(1),
+                                   orig_rt(s))[1]
+    try:
+        ref = cg.execute(1)
+    finally:
+        gcs.put_many, gcs.register_task = orig_pm, orig_rt
+    assert core.get(ref) == 5
+    assert len(put_many_calls) == 1, (
+        f"{len(put_many_calls)} control-plane registration rounds for "
+        "one invocation; execute() must batch them into one")
+    assert not register_task_calls
+
+    from repro.core.profiler import summarize
+    s = summarize(gcs)
+    assert s["graph_compiles"] == 1
+    assert s["graph_invocations"] == 1
+    assert s["graph_batched_tasks_mean"] == 3.0
+
+
+def test_inline_chaining_skips_scheduler(cluster):
+    """A same-node dependent runs on the finishing worker without
+    re-entering the scheduler: graph_chain events appear and chained
+    nodes have no sched_local event of their own."""
+    cg = dag.compile(inc.bind(inc.bind(inc.bind(dag.input(0)))))
+    assert core.get(cg.execute(0)) == 3
+    evs = cluster.gcs.events()
+    chained = {e[2] for e in evs if e[1] == "graph_chain"}
+    assert chained, "no inline-chained executions in a 3-node chain"
+    scheduled = {e[2] for e in evs if e[1] == "sched_local"}
+    assert not (chained & scheduled), (
+        "chained nodes also went through the local scheduler")
+
+    from repro.core.profiler import summarize
+    assert summarize(cluster.gcs)["graph_inline_chained"] >= 1
+
+
+def test_placement_plan_coresides_chain(cluster):
+    """The graph-affinity term keeps a dependent chain on one planned
+    node (that is what makes inline chaining apply)."""
+    cg = dag.compile(inc.bind(inc.bind(inc.bind(dag.input(0)))))
+    planned = cluster.gcs.graph_meta(cg.graph_id)["planned"]
+    assert len(set(planned)) == 1
+
+
+# ------------------------------------------------------------- interop
+
+def test_results_compose_with_wait_and_free(cluster):
+    cg = dag.compile(inc.bind(inc.bind(dag.input(0))))
+    refs = [cg.execute(i) for i in range(4)]
+    done, pending = core.wait(refs, num_returns=4, timeout=10)
+    assert len(done) == 4 and not pending
+    assert core.get(refs) == [2, 3, 4, 5]
+    # free() reclaims the sink eagerly; a later get reconstructs it via
+    # lineage (sinks are ordinary task outputs — same rule as eager)
+    core.free(refs[0])
+    assert cluster.memory.quiesce(5)
+    assert not cluster.gcs.locations(refs[0].id)
+    assert core.get(ObjectRef(refs[0].id), timeout=10) == 2
+    assert any(e[1] == "reconstruct" for e in cluster.gcs.events())
+
+
+def test_sink_feeds_eager_task_and_vice_versa(cluster):
+    cg = dag.compile(inc.bind(dag.input(0)))
+    sink = cg.execute(1)
+    assert core.get(inc.submit(sink)) == 3          # compiled -> eager
+    assert core.get(cg.execute(inc.submit(10))) == 12  # eager -> compiled
+
+
+def test_intermediates_reclaimed_sinks_survive(cluster):
+    """Intermediate outputs are graph-held borrows: pinned while their
+    consumers are pending, garbage-collected after the invocation
+    completes. Sinks are owned by the returned handles."""
+    cg = dag.compile(inc.bind(inc.bind(dag.input(0))))
+    ref = cg.execute(0)
+    assert core.get(ref) == 2
+    inv = ref.id.rsplit(".n", 1)[0]
+    inter = f"{inv}.n0.r0"
+    assert cluster.memory.quiesce(5)
+    assert cluster.gcs.is_freed(inter)
+    assert not cluster.gcs.locations(inter)
+    assert core.get(ref) == 2                        # sink still alive
+
+
+def test_actor_seq_block_orders_with_eager_calls(cluster):
+    @core.remote
+    class Counter:
+        def __init__(self):
+            self.v = 0
+
+        def incr(self, k):
+            self.v += k
+            return self.v
+
+    h = Counter.submit()
+    cg = dag.compile(inc.bind(h.incr.bind(dag.input(0))))
+    assert core.get(cg.execute(5)) == 6      # incr -> 5, inc -> 6
+    assert core.get(h.incr.submit(1)) == 6   # eager call ordered after
+    assert core.get(cg.execute(2)) == 9      # 6 + 2 = 8, inc -> 9
+
+    # one seq reservation + one batched log append per actor per
+    # invocation, and the compiled calls landed in the replay log
+    log = cluster.gcs.actor_log(h.actor_id)
+    assert len(log) == 3
+    seqs = [s for s, _ in log]
+    assert sorted(seqs) == [0, 1, 2]
+
+
+def test_actor_update_then_read_order_in_one_graph(cluster):
+    """Plan order is seq order: an update bound before a read in the
+    same compiled graph is always observed by the read."""
+    @core.remote
+    class Cell:
+        def __init__(self):
+            self.v = 0
+
+        def set(self, v):
+            self.v = v
+
+        def get(self):
+            return self.v
+
+    h = Cell.submit()
+    upd = h.set.bind(dag.input(0))
+    red = h.get.bind()
+    cg = dag.compile([upd, red])
+    for v in (3, 7, 11):
+        refs = cg.execute(v)
+        assert core.get(refs[1]) == v
+
+
+# ----------------------------------------------------- failure semantics
+
+def test_taskerror_propagates_to_sink_like_eager(cluster):
+    @core.remote
+    def boom(x):
+        raise ValueError("bad wolf")
+
+    with pytest.raises(TaskError):
+        core.get(inc.submit(boom.submit(1)), timeout=10)   # eager
+    cg = dag.compile(inc.bind(boom.bind(dag.input(0))))
+    with pytest.raises(TaskError):
+        core.get(cg.execute(1), timeout=10)                # compiled
+
+
+def test_kill_node_mid_invocation_replays_lineage():
+    """Kill the planned node while a compiled chain is mid-flight: the
+    lost nodes replay via lineage and the sink resolves to the same
+    value the eager path would produce."""
+    c = core.init(num_nodes=2, workers_per_node=2)
+    try:
+        @core.remote
+        def slow_inc(x):
+            time.sleep(0.1)
+            return x + 1
+
+        cg = dag.compile(
+            slow_inc.bind(slow_inc.bind(slow_inc.bind(dag.input(0)))))
+        planned = c.gcs.graph_meta(cg.graph_id)["planned"][0]
+        ref = cg.execute(0)
+        time.sleep(0.05)                       # mid-invocation
+        c.kill_node(planned)
+        assert core.get(ref, timeout=30) == 3
+        kinds = {e[1] for e in c.gcs.events()}
+        assert "node_failure" in kinds
+    finally:
+        core.shutdown()
+
+
+def test_kill_before_dispatchable_dependents(cluster):
+    """A graph task LOST with its node must itself trigger the replay —
+    its dependents are gated on invocation counters, not pub-sub, so
+    no fetcher exists to notice the loss."""
+    release = threading.Event()
+
+    @core.remote
+    def gated(x):
+        release.wait(5)
+        return x + 1
+
+    cg = dag.compile(inc.bind(gated.bind(dag.input(0))))
+    planned = cluster.gcs.graph_meta(cg.graph_id)["planned"][0]
+    ref = cg.execute(0)
+    time.sleep(0.05)
+    cluster.kill_node(planned)
+    release.set()
+    assert core.get(ref, timeout=30) == 2
+
+
+def test_stale_plan_respills_off_actor_reserved_node():
+    """An actor placed AFTER compile can permanently reserve the
+    planned node's capacity: dispatch must re-place such roots and
+    dependents (steady-state check) instead of starving them in a
+    force-local backlog."""
+    c = core.init(num_nodes=2, workers_per_node=2)
+    try:
+        cg = dag.compile(inc.bind(inc.bind(dag.input(0))))
+        planned = c.gcs.graph_meta(cg.graph_id)["planned"][0]
+
+        class Fat:
+            nbytes = 1 << 20
+
+        # locality bait pins the hog actor onto the planned node
+        c.nodes[planned].store.put("stale:fat", Fat())
+
+        @core.remote(resources={"cpu": 2.0})
+        class Hog:
+            def __init__(self, x):
+                pass
+
+            def ping(self):
+                return "pong"
+
+        h = Hog.submit(ObjectRef("stale:fat"))
+        assert c.gcs.actor_node(h.actor_id) == planned
+        # grant is held once a method answers
+        assert core.get(h.ping.submit(), timeout=10) == "pong"
+        assert core.get(cg.execute(0), timeout=15) == 2
+    finally:
+        core.shutdown()
+
+
+def test_bad_input_does_not_leak_actor_seqs(cluster):
+    """A rejected execute() input must fail BEFORE actor seq blocks are
+    reserved — a reserved-but-undelivered seq gap would wedge the
+    actor's in-order mailbox for every later call."""
+    @core.remote
+    class Echo:
+        def echo(self, x):
+            return x
+
+    h = Echo.submit()
+    cg = dag.compile(h.echo.bind(dag.input(0)))
+    with pytest.raises(TypeError, match="nested"):
+        cg.execute({"bad": [core.put(1)]})
+    # the actor is not wedged: later eager and compiled calls complete
+    assert core.get(h.echo.submit("eager"), timeout=10) == "eager"
+    assert core.get(cg.execute("compiled"), timeout=10) == "compiled"
+
+
+def test_lost_graph_task_with_no_live_nodes_parks_until_restart():
+    """kill the only node while a compiled task runs: graph_on_lost's
+    replay has no live target and must park (not crash / not strand
+    the task in PENDING); restart_node completes the invocation."""
+    c = core.init(num_nodes=1, workers_per_node=2)
+    try:
+        release = threading.Event()
+
+        @core.remote
+        def gated(x):
+            release.wait(5)
+            return x + 1
+
+        cg = dag.compile(inc.bind(gated.bind(dag.input(0))))
+        ref = cg.execute(0)
+        time.sleep(0.05)          # gated() is mid-flight on node 0
+        c.kill_node(0)
+        release.set()
+        time.sleep(0.1)           # lost path runs with zero live nodes
+        c.restart_node(0)
+        assert core.get(ref, timeout=30) == 2
+    finally:
+        core.shutdown()
+
+
+def test_input_index_validation(cluster):
+    with pytest.raises(ValueError, match=">= 0"):
+        dag.input(-1)
+    cg = dag.compile(inc.bind(dag.input(0)))
+    with pytest.raises(TypeError, match="exactly 1"):
+        cg.execute()
+    with pytest.raises(TypeError, match="exactly 1"):
+        cg.execute(1, 2)
+
+
+def test_compile_very_deep_chain_no_recursion_limit(cluster):
+    """The plan walk is iterative: a pipeline deeper than Python's
+    recursion limit must compile (and the default limit is ~1000)."""
+    node = dag.input(0)
+    depth = 1500
+    for _ in range(depth):
+        node = inc.bind(node)
+    cg = dag.compile(node)
+    assert len(cg.nodes) == depth
+    # plan indices follow bind order (head of the chain first)
+    assert cg.nodes[0].deps == [] and cg.nodes[-1].deps == [depth - 2]
+
+
+def test_actor_restart_replays_compiled_calls():
+    """Compiled method calls are in the replay log (one batched append
+    per invocation): killing the actor's node replays them in seq order
+    on the new incarnation."""
+    c = core.init(num_nodes=2, workers_per_node=2)
+    try:
+        @core.remote
+        class Acc:
+            def __init__(self):
+                self.v = 0
+
+            def incr(self, k):
+                self.v += k
+                return self.v
+
+        h = Acc.submit()
+        cg = dag.compile(h.incr.bind(dag.input(0)))
+        assert core.get(cg.execute(5), timeout=10) == 5
+        assert core.get(h.incr.submit(2), timeout=10) == 7
+        victim = c.gcs.actor_node(h.actor_id)
+        c.kill_node(victim)
+        # state was rebuilt by replaying ctor + both logged calls
+        assert core.get(cg.execute(3), timeout=20) == 10
+    finally:
+        core.shutdown()
+
+
+# ------------------------------------------------------------ DES model
+
+def test_sim_compiled_chain_dispatch():
+    from repro.core.simulator import ClusterSim, SimCosts, SimTask
+
+    costs = SimCosts()
+    sim = ClusterSim(num_nodes=4, workers_per_node=2, costs=costs, seed=1)
+    tasks = [SimTask(task_id=100 + i, duration_s=1e-3, submit_node=0)
+             for i in range(3)]
+    sim.submit_chain(tasks, at=0.0)
+    sim.run()
+    assert len(sim.finished) == 3
+    # chained successors run back-to-back on the head's node with no
+    # per-task scheduling events
+    assert len({t.node for t in tasks}) == 1
+    hows = [h for h, _ in sim.sched_latencies]
+    assert hows.count("chain") == 2
+    # one graph dispatch charge, then 3 tasks + overheads
+    span = max(t.finish_t for t in tasks)
+    assert span >= costs.graph_dispatch_s + 3 * 1e-3
+    assert span < costs.graph_dispatch_s + 3 * (
+        1e-3 + costs.worker_overhead_s + costs.gcs_op_s
+        + costs.local_sched_s) + 1e-4
+
+
+def test_sim_costs_calibrate_graph_dispatch(tmp_path):
+    import json
+
+    from repro.core.simulator import SimCosts
+    doc = {"runs": {"prX": {
+        "submit": {"p50_us": 20.0}, "gcs_put": {"p50_us": 1.0},
+        "get_done": {"p50_us": 5.0}, "e2e_local": {"p50_us": 70.0},
+        "graph_step": {"compiled": {"p50_us": 120.0},
+                       "eager": {"p50_us": 300.0}},
+    }}, "speedup_run": "prX"}
+    p = tmp_path / "bench.json"
+    p.write_text(json.dumps(doc))
+    costs = SimCosts.from_microbench(str(p))
+    assert costs.graph_dispatch_s == pytest.approx(50e-6, rel=1e-6)
