@@ -1,0 +1,155 @@
+"""Seeded chaos smoke: the RL example workload under fault injection.
+
+CI gate for the failure-hardened runtime: runs the compiled-graph RL
+training loop (stateful learner actor + simulation fan-out, the paper's
+Fig. 1b shape) while a fixed-seed ``FaultInjector`` kills and restarts
+nodes underneath it, with heartbeat failure detection on. The run FAILS
+(exit 1) on any of:
+
+  * a hung future — every submitted ref must resolve to a value or a
+    *typed* error (TaskError family / GetTimeoutError /
+    ObjectReclaimedError) within the per-get timeout;
+  * a non-typed error surfacing from the runtime;
+  * leaked runtime threads after ``core.shutdown()``;
+  * blowing the hard wall-clock budget (``--budget-s``).
+
+Run:  PYTHONPATH=src python benchmarks/chaos_smoke.py [--seed 42]
+      [--cycles 6] [--iters 14] [--budget-s 180]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import threading
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "examples"))
+
+from repro import core, dag  # noqa: E402
+from repro.core import (FaultInjector, GetTimeoutError,  # noqa: E402
+                        ObjectReclaimedError, TaskError)
+
+TYPED_ERRORS = (TaskError, GetTimeoutError, ObjectReclaimedError)
+RUNTIME_THREAD_PREFIXES = ("worker-", "actor-", "heartbeat-",
+                           "failure-detector", "chaos", "mm-reclaimer")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--cycles", type=int, default=6,
+                    help="kill/restart pairs injected (>=5 pairs = the "
+                         ">=10-event soak)")
+    ap.add_argument("--iters", type=int, default=14,
+                    help="RL training iterations under chaos")
+    ap.add_argument("--budget-s", type=float, default=180.0,
+                    help="hard wall-clock bound for the whole smoke")
+    args = ap.parse_args()
+    t_start = time.perf_counter()
+
+    from rl_pipeline import SIMS_PER_STEP, PolicyLearner, simulate
+
+    cluster = core.init(num_nodes=4, workers_per_node=2,
+                        failure_detection=True, heartbeat_interval_s=0.02,
+                        default_max_retries=64)
+    learner = PolicyLearner.submit()
+
+    upd = learner.update.bind(dag.input(0))
+    w = learner.weights.bind()
+    sims = [simulate.bind(w, dag.input(1 + i))
+            for i in range(SIMS_PER_STEP)]
+    step = dag.compile([upd] + sims)
+
+    fi = FaultInjector(cluster, seed=args.seed, min_live=2)
+    plan = fi.kill_restart_cycle(cycles=args.cycles, interval_s=0.25)
+    fi.start(events=plan)
+
+    all_refs = []
+    values = typed = 0
+
+    def resolve(ref, timeout=60.0):
+        nonlocal values, typed
+        try:
+            val = core.get(ref, timeout=timeout)
+            values += 1
+            return val
+        except TYPED_ERRORS as e:
+            typed += 1
+            print(f"  typed failure ({type(e).__name__}): "
+                  f"{str(e).splitlines()[0][:90]}")
+            return None
+
+    w_ref = learner.weights.submit()
+    pending = [simulate.submit(w_ref, s) for s in range(16)]
+    all_refs += [w_ref] + pending
+    for it in range(args.iters):
+        batch = []
+        deadline = time.perf_counter() + 10.0
+        while pending and len(batch) < 12 \
+                and time.perf_counter() < deadline:
+            done, pending = core.wait(
+                pending, num_returns=min(4, len(pending)), timeout=0.5)
+            for d in done:
+                v = resolve(d, timeout=20.0)
+                if v is not None:
+                    batch.append(v)
+        refs = step.execute(tuple(batch),
+                            *(1000 * it + s
+                              for s in range(SIMS_PER_STEP)))
+        all_refs += refs
+        pending += refs[1:]
+        resolve(refs[0], timeout=30.0)
+        if it % 5 == 0 or it == args.iters - 1:
+            live = sum(1 for n in cluster.nodes if n.alive)
+            print(f"iter {it:3d}  live nodes {live}  "
+                  f"faults applied {len(fi.applied)}")
+
+    # drain: every outstanding future must resolve (value or typed)
+    for ref in pending:
+        resolve(ref, timeout=30.0)
+
+    fi.stop()
+    applied = list(fi.applied)
+    kills = sum(1 for _, _, o, _ in applied if o == "kill")
+    restarts = sum(1 for _, _, o, _ in applied if o == "restart")
+    print(f"chaos events applied: {len(applied)} "
+          f"({kills} kills, {restarts} restarts) of {len(plan)} planned")
+
+    from repro.core import profiler
+    summary = profiler.summarize(cluster.gcs)
+    print(f"detector kills: {summary['detector_kills']}  "
+          f"node failures: {summary['node_failures']}  "
+          f"retries: {summary['retries']}  "
+          f"unrecoverable: {summary['tasks_unrecoverable']}")
+
+    core.shutdown()
+    time.sleep(0.5)
+
+    failures = []
+    if kills + restarts < 2 * args.cycles:
+        # a planned kill only downgrades to 'skip' at the min_live
+        # floor; the default plan must land every pair
+        failures.append(
+            f"only {kills + restarts}/{2 * args.cycles} kill/restart "
+            f"events applied")
+    leaked = [t.name for t in threading.enumerate()
+              if t.name.startswith(RUNTIME_THREAD_PREFIXES)]
+    if leaked:
+        failures.append(f"leaked threads after teardown: {leaked}")
+    elapsed = time.perf_counter() - t_start
+    if elapsed > args.budget_s:
+        failures.append(
+            f"wall clock {elapsed:.1f}s blew the {args.budget_s}s budget")
+    print(f"futures: {values} values, {typed} typed failures, "
+          f"{len(all_refs)} total; wall clock {elapsed:.1f}s")
+    if failures:
+        for f in failures:
+            print(f"CHAOS SMOKE FAIL: {f}")
+        return 1
+    print("chaos smoke OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

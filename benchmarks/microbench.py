@@ -5,16 +5,17 @@ empty-task e2e ~290us local / ~1ms remote. We measure those four
 quantities on our runtime plus the node-local get fast path, wait() wakeup
 latency, raw control-plane op latency, the stateful-actor method-call
 round trip, task throughput, a bounded-store churn loop (steady-state
-resident bytes + GC reclaim latency under sustained put→get→drop), and
-the compiled-graph dispatch A/B (a 3-node chain as one `execute()` vs
-three eager submits, same window).
+resident bytes + GC reclaim latency under sustained put→get→drop), the
+compiled-graph dispatch A/B (a 3-node chain as one `execute()` vs
+three eager submits, same window), and failure-recovery latency (node
+kill → first lineage-replayed result).
 
 Results land in two places:
 
   * ``benchmarks/results/microbench.json`` — this run only (feeds the DES
     simulator's cost model via ``SimCosts.from_microbench``);
   * ``BENCH_core.json`` at the repo root — the tracked perf trajectory.
-    Each invocation upserts its ``--run-name`` entry (default ``pr5``) and
+    Each invocation upserts its ``--run-name`` entry (default ``pr6``) and
     preserves the other entries (notably ``seed``, the pre-PR1 baseline),
     then recomputes speedups vs the seed. Regenerate with:
 
@@ -230,6 +231,41 @@ def run(n: int = 2000) -> dict:
     }
     core.shutdown()
 
+    # 12. recovery latency: kill -> first replayed result. Every live
+    #     copy of one finished task's output dies with its node(s); the
+    #     timed section is the get() that drives automatic lineage
+    #     replay on the surviving node. Fresh cluster per the usual
+    #     isolation rule; the victim is restarted between iterations so
+    #     capacity is constant when the next sample starts.
+    cluster = core.init(num_nodes=2, workers_per_node=2,
+                        spill_threshold=4096)
+
+    @core.remote
+    def payload(i):
+        return bytes(1024) + i.to_bytes(4, "little")
+
+    ts = []
+    iters = max(n // 100, 10)
+    for i in range(iters):
+        ref = payload.submit(i)
+        core.get(ref)
+        live = [nd.node_id for nd in cluster.nodes if nd.alive]
+        victims = [nid for nid in cluster.gcs.locations(ref.id)
+                   if cluster.nodes[nid].alive]
+        if len(victims) >= len(live):
+            victims = victims[:-1]  # the replay needs a live node
+        if not victims:
+            continue
+        t0 = time.perf_counter()
+        for nid in victims:
+            cluster.kill_node(nid)
+        core.get(ref, timeout=30)
+        ts.append(time.perf_counter() - t0)
+        for nid in victims:
+            cluster.restart_node(nid)
+    out["recovery"] = {"iterations": len(ts), **_stats(ts)} if ts else {}
+    core.shutdown()
+
     out["paper_targets_us"] = PAPER_TARGETS_US
     return out
 
@@ -395,6 +431,9 @@ def rows():
         yield ("microbench.graph_step_eager_us",
                out["graph_step"]["eager"]["p50_us"],
                "eager 3-submit chain (same window)")
+    if out.get("recovery"):
+        yield ("microbench.recovery_us", out["recovery"]["p50_us"],
+               "kill -> first replayed result")
 
 
 def main() -> None:
@@ -404,7 +443,7 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="quick CI run: small n, does not touch "
                          "BENCH_core.json")
-    ap.add_argument("--run-name", default="pr5",
+    ap.add_argument("--run-name", default="pr6",
                     help="entry name in BENCH_core.json")
     ap.add_argument("--out", default=None,
                     help="override BENCH_core.json path")

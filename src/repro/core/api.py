@@ -60,6 +60,52 @@
      lineage surfaces as a prompt ``ObjectReclaimedError``. Tasks can
      hint their output footprint with ``resources={"mem": nbytes}`` so
      placement steers big outputs toward nodes with free store bytes.
+  9. Fault tolerance — failure handling is automatic and *bounded*.
+     Detection: ``init(failure_detection=True)`` starts per-node
+     heartbeat beaters and a cluster monitor thread; a node missing
+     ``heartbeat_miss`` consecutive beats (interval
+     ``heartbeat_interval_s``) — or, with ``hung_task_timeout_s`` set,
+     holding any task past that bound — is declared dead and driven
+     through the same ``kill_node`` + lineage-replay path a test invokes
+     by hand. Retry/deadline policy, per function::
+
+         fn.options(max_retries=3,              # replay budget
+                    retry_exceptions=(IOError,),# app-level retry set
+                    backoff=0.01,               # base for 2**k backoff
+                    deadline=0.5)               # seconds from submit
+
+     * ``max_retries`` bounds *failure replays*: lineage replays of a
+       lost output, resubmits off a killed node, compiled-graph replay
+       (``graph_on_lost``), actor replay, and ``retry_exceptions``
+       retries all draw from one per-task attempt counter in the
+       control plane (-1 = the cluster's ``default_max_retries``).
+       Evict-and-reconstruct of a *successful* task's output never
+       counts — eviction is the store's choice, not a failure.
+     * ``retry_exceptions`` (True, a type, or a sequence of types)
+       makes the worker re-run a task whose function raised a matching
+       exception instead of storing the error, with exponential
+       backoff ``backoff * 2**(attempt-1)`` seconds between attempts.
+     * ``deadline`` (seconds from submit) resolves the task's futures
+       promptly with ``TaskDeadlineError`` when it expires — whether
+       the task is queued, running long, or lost.
+
+     Error taxonomy — every failure surfaces as a typed exception, all
+     raised by ``get``:
+       * ``TaskError`` — the task's function raised; the traceback is
+         stored as the result and re-raised at every getter.
+       * ``TaskUnrecoverableError(TaskError)`` — the replay budget is
+         exhausted; the runtime permanently resolved the task with this
+         error instead of retrying forever.
+       * ``TaskDeadlineError(TaskError)`` — the ``deadline=`` expired
+         before a result was produced.
+       * ``GetTimeoutError(TimeoutError)`` — ``get(ref, timeout=)``
+         expired; carries ``task_id``/``task_state``/``node_id`` for
+         the producing task so a hang is diagnosable.
+       * ``ObjectReclaimedError`` — the object was freed/evicted and
+         has no lineage to reconstruct it (see point 8).
+     The seeded chaos harness (``repro.core.chaos.FaultInjector``)
+     exercises all of the above against a live cluster with
+     deterministic kill/restart/delay/drop schedules.
 
 Usage:
     cluster = init(num_nodes=4, workers_per_node=2)
@@ -223,9 +269,24 @@ def _holds_graph_node(obj) -> bool:
     return False
 
 
+def _normalize_retry_exceptions(value) -> Optional[Tuple[type, ...]]:
+    """`retry_exceptions=True` retries any Exception; a type or sequence
+    of types retries exactly those; None/False disables app-level
+    retry. Normalized to a tuple so isinstance() takes it directly."""
+    if value is None or value is False:
+        return None
+    if value is True:
+        return (Exception,)
+    if isinstance(value, type):
+        return (value,)
+    return tuple(value)
+
+
 class RemoteFunction:
     def __init__(self, fn, num_returns: int = 1,
-                 resources: Optional[Dict[str, float]] = None):
+                 resources: Optional[Dict[str, float]] = None,
+                 max_retries: int = -1, retry_exceptions=None,
+                 backoff: float = 0.0, deadline: float = 0.0):
         self._fn = fn
         self.name = f"{fn.__module__}.{fn.__qualname__}"
         self.num_returns = num_returns
@@ -234,18 +295,35 @@ class RemoteFunction:
         # against store free space), not a capacity resource — split it
         # out so satisfies()/try_acquire() never see it
         self.mem_bytes = int(self.resources.pop("mem", 0))
+        # bounded retry / deadline policy (see the "Fault tolerance"
+        # section of the module docstring): threaded into every TaskSpec
+        # this function submits (eagerly or via bind/compile)
+        self.max_retries = max_retries
+        self.retry_exceptions = _normalize_retry_exceptions(retry_exceptions)
+        self.backoff = backoff
+        self.deadline = deadline
         self._registered_on: Optional[int] = None
         functools.update_wrapper(self, fn)
 
     def options(self, *, num_returns: Optional[int] = None,
-                resources: Optional[Dict[str, float]] = None
+                resources: Optional[Dict[str, float]] = None,
+                max_retries: Optional[int] = None,
+                retry_exceptions=None,
+                backoff: Optional[float] = None,
+                deadline: Optional[float] = None
                 ) -> "RemoteFunction":
-        # explicit `is None` merge: a falsy override (resources={}) must
-        # take effect, not be silently replaced by the old value
+        # explicit `is None` merge: a falsy override (resources={},
+        # retry_exceptions=False, backoff=0) must take effect, not be
+        # silently replaced by the old value
         rf = RemoteFunction(
             self._fn,
             self.num_returns if num_returns is None else num_returns,
-            self.resources if resources is None else resources)
+            self.resources if resources is None else resources,
+            self.max_retries if max_retries is None else max_retries,
+            (self.retry_exceptions if retry_exceptions is None
+             else retry_exceptions),
+            self.backoff if backoff is None else backoff,
+            self.deadline if deadline is None else deadline)
         if resources is None:  # inherited resources keep their mem hint
             rf.mem_bytes = self.mem_bytes
         return rf
@@ -286,7 +364,11 @@ class RemoteFunction:
         spec = TaskSpec(task_id=task_id, func_name=self.name, args=bargs,
                         kwargs=bkwargs, return_ids=ret_ids,
                         resources=self.resources, submitter_node=submitter,
-                        mem_bytes=self.mem_bytes)
+                        mem_bytes=self.mem_bytes,
+                        max_retries=self.max_retries,
+                        retry_exceptions=self.retry_exceptions,
+                        backoff_s=self.backoff,
+                        deadline_s=self.deadline)
         # pin BEFORE the task becomes visible: with registration first,
         # another thread dropping the last owning handle of an argument
         # in the gap let the reclaimer collect it out from under the
@@ -294,6 +376,9 @@ class RemoteFunction:
         # lineage-less objects)
         mm.pin_task(task_id, spec)  # args stay resident until DONE
         gcs.register_task(spec)
+        if spec.deadline_s:
+            # only deadline-carrying tasks ever touch the detector
+            cluster.detector.track_deadline(spec)
         gcs.log_event("submit", task_id, f"node{submitter}")
         entry.local_scheduler.submit(spec)
         return refs[0] if self.num_returns == 1 else refs
@@ -308,6 +393,10 @@ class RemoteFunction:
                          num_returns=self.num_returns,
                          resources=self.resources,
                          mem_bytes=self.mem_bytes,
+                         max_retries=self.max_retries,
+                         retry_exceptions=self.retry_exceptions,
+                         backoff_s=self.backoff,
+                         deadline_s=self.deadline,
                          args=args, kwargs=kwargs)
 
     def __call__(self, *args, **kwargs):
@@ -451,16 +540,21 @@ class ActorHandle:
 
 def remote(fn=None, *, num_returns: int = 1,
            resources: Optional[Dict[str, float]] = None,
-           checkpoint_interval: int = 0):
+           checkpoint_interval: int = 0, max_retries: int = -1,
+           retry_exceptions=None, backoff: float = 0.0,
+           deadline: float = 0.0):
     """Decorator designating a function as a remote task (R4), or a class
     as an actor (stateful task sequence). `checkpoint_interval` applies to
     classes only: every K completed method calls the actor's
     `__getstate__` is checkpointed to the control plane, bounding the
-    replay a restart performs."""
+    replay a restart performs. `max_retries`/`retry_exceptions`/
+    `backoff`/`deadline` apply to functions only — see the "Fault
+    tolerance" section above."""
     def wrap(f):
         if isinstance(f, type):
             return ActorClass(f, resources, checkpoint_interval)
-        return RemoteFunction(f, num_returns, resources)
+        return RemoteFunction(f, num_returns, resources, max_retries,
+                              retry_exceptions, backoff, deadline)
     if fn is None:
         return wrap
     return wrap(fn)

@@ -75,6 +75,15 @@ class TaskSpec:
     # dependents on the finishing worker. Plain eager tasks: defaults.
     graph_inv: Optional[str] = None
     graph_idx: int = -1
+    # bounded retry / deadline policy (fn.options): replay budget for
+    # failure replays and matching application exceptions (-1 = cluster
+    # default), exception types the worker retries instead of storing a
+    # TaskError, base backoff (attempt k waits backoff_s * 2**(k-1)
+    # seconds), and a relative deadline from task creation (0 = none)
+    max_retries: int = -1
+    retry_exceptions: Optional[Tuple[type, ...]] = None
+    backoff_s: float = 0.0
+    deadline_s: float = 0.0
 
 
 @dataclass
@@ -486,6 +495,44 @@ class ControlPlane:
 
     def actor_checkpoint(self, actor_id: str) -> Optional[Tuple[int, Any]]:
         return self.get(f"actor_ckpt:{actor_id}")
+
+    # ------------------------------------------------- heartbeat table
+    # Liveness beats: one key per node, rewritten by the node's beater
+    # thread at the detector interval — batched in the sense that a
+    # single beat covers every worker/actor thread the node hosts, and
+    # nothing on the task hot path ever touches these keys. The failure
+    # detector's monitor thread is the only reader. Beats skip put()'s
+    # subscriber collection (nothing subscribes to them by design).
+
+    def beat(self, node_id: int, t: float) -> None:
+        key = f"hb:{node_id}"
+        sh = self._shard(key)
+        with sh.lock:
+            sh.data[key] = t
+
+    def heartbeat(self, node_id: int) -> Optional[float]:
+        return self.get(f"hb:{node_id}")
+
+    # ------------------------------------------------- replay counters
+    # Per-task (and per-actor) failure-replay attempt counters, bounded
+    # by the `max_retries` budget. They live here rather than on the
+    # TaskSpec because specs in the task table are immutable and shared
+    # by every replay. Written only on failure paths (lineage replay,
+    # drained-node resubmit, application retries) — never on a task's
+    # normal lifecycle.
+
+    def count_replay(self, task_id: str) -> int:
+        """Increment and return the replay-attempt counter (lock-only,
+        like incr_ref — no subscribers, no callback collection)."""
+        key = f"attempts:{task_id}"
+        sh = self._shard(key)
+        with sh.lock:
+            v = (sh.data.get(key) or 0) + 1
+            sh.data[key] = v
+        return v
+
+    def replay_count(self, task_id: str) -> int:
+        return self.get(f"attempts:{task_id}") or 0
 
     # --------------------------------------------------------- graph table
     # Compiled task graphs (dag.py). The static plan is registered once

@@ -84,14 +84,18 @@ class GraphNode:
 
     __slots__ = ("func_name", "fn", "num_returns", "resources",
                  "mem_bytes", "actor_handle", "actor_method",
-                 "args", "kwargs")
+                 "args", "kwargs", "max_retries", "retry_exceptions",
+                 "backoff_s", "deadline_s")
 
     def __init__(self, *, func_name: str, fn=None, num_returns: int = 1,
                  resources: Optional[Dict[str, float]] = None,
                  mem_bytes: int = 0, actor_handle=None,
                  actor_method: Optional[str] = None,
                  args: Tuple[Any, ...] = (),
-                 kwargs: Optional[Dict[str, Any]] = None):
+                 kwargs: Optional[Dict[str, Any]] = None,
+                 max_retries: int = -1,
+                 retry_exceptions: Optional[Tuple[type, ...]] = None,
+                 backoff_s: float = 0.0, deadline_s: float = 0.0):
         self.func_name = func_name
         self.fn = fn
         self.num_returns = num_returns
@@ -101,6 +105,10 @@ class GraphNode:
         self.actor_method = actor_method
         self.args = args
         self.kwargs = dict(kwargs or {})
+        self.max_retries = max_retries
+        self.retry_exceptions = retry_exceptions
+        self.backoff_s = backoff_s
+        self.deadline_s = deadline_s
         _check_bindable(self.args, self.kwargs)
 
     def __getitem__(self, i: int) -> GraphOutput:
@@ -403,7 +411,10 @@ class CompiledGraph:
                 actor_id=None if h is None else h.actor_id,
                 actor_method=g.actor_method,
                 actor_seq=seqs.get(pn.idx, -1),
-                graph_inv=inv_id, graph_idx=pn.idx))
+                graph_inv=inv_id, graph_idx=pn.idx,
+                max_retries=g.max_retries,
+                retry_exceptions=g.retry_exceptions,
+                backoff_s=g.backoff_s, deadline_s=g.deadline_s))
 
         # -- adopt sink handles before anything can run (a worker
         #    finishing first must not hand a sink to the reclaimer),
@@ -422,6 +433,9 @@ class CompiledGraph:
                                      "epoch": epoch,
                                      "nodes": len(specs),
                                      "sinks": [r.id for r in refs]}),))
+        for spec in specs:
+            if spec.deadline_s:
+                cluster.detector.track_deadline(spec)
 
         # -- one batched replay-log append per actor (logged BEFORE any
         #    mailbox routing, like eager calls: a call racing an actor

@@ -308,13 +308,33 @@ class MemoryManager:
 
     def replayable(self, oid: str) -> bool:
         """Whether lineage can recompute the object: a producing task
-        exists and it is not an actor method (actor results depend on
-        actor state — only a node-death replay regenerates those)."""
+        exists, it is not an actor method (actor results depend on
+        actor state — only a node-death replay regenerates those), its
+        replay budget is not already exhausted (a sealed task's error
+        object must be treated as non-reconstructible — evicting it and
+        replaying would spin on the same failure), and none of its
+        inputs is a *dead* actor output: a replay needing an
+        actor-produced argument whose refcount already hit zero would
+        park forever — the argument has no lineage and nothing will
+        ever regenerate it."""
         tid = self.gcs.producing_task(oid)
         if tid is None:
             return False
         spec = self.gcs.task_spec(tid)
-        return spec is not None and spec.actor_id is None
+        if spec is None or spec.actor_id is not None:
+            return False
+        if self.gcs.replay_count(tid) > self._cluster.retry_budget(spec):
+            return False
+        from repro.core.scheduler import _ref_ids
+        for arg_id in _ref_ids(spec):
+            ptid = self.gcs.producing_task(arg_id)
+            if ptid is None:
+                continue
+            pspec = self.gcs.task_spec(ptid)
+            if (pspec is not None and pspec.actor_id is not None
+                    and self.gcs.refcount(arg_id) <= 0):
+                return False
+        return True
 
     def unfetchable(self, oid: str) -> bool:
         """A fetch should fail promptly: the object was freed/reclaimed

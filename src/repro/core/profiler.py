@@ -30,13 +30,23 @@ def summarize(gcs: ControlPlane) -> Dict[str, float]:
     built), ``graph_execute`` (invocations, each carrying the size of
     its single batched registration), and ``graph_chain`` (dependents
     executed inline on the finishing worker, never re-entering the
-    scheduler)."""
+    scheduler). Failure-hardening counters come from the detector and
+    retry machinery: ``node_failure`` (fail-stops, however triggered),
+    ``detector_kill`` / ``watchdog_kill`` (failures the heartbeat
+    monitor / hung-task watchdog declared), ``retry`` (policy-driven
+    exception retries), ``task_unrecoverable`` / ``task_deadline``
+    (tasks sealed by budget exhaustion / deadline expiry),
+    ``actor_unrecoverable`` (actors past their restart budget), and
+    ``chaos`` (injected fault events)."""
     raw = gcs.events()
     tl: Dict[str, List] = defaultdict(list)
     evictions = reclaims = reconstructs_after_evict = 0
     bytes_freed = 0
     graph_compiles = graph_invocations = graph_chained = 0
     graph_batched_tasks = 0
+    node_failures = detector_kills = watchdog_kills = 0
+    retries = unrecoverable = deadline_expired = 0
+    actor_unrecoverable = chaos_events = 0
     for t, kind, task_id, where, extra in raw:
         tl[task_id].append((t, kind, where, extra))
         if kind == "evict":
@@ -54,6 +64,22 @@ def summarize(gcs: ControlPlane) -> Dict[str, float]:
             graph_batched_tasks += extra.get("nodes", 0)
         elif kind == "graph_chain":
             graph_chained += 1
+        elif kind == "node_failure":
+            node_failures += 1
+        elif kind == "detector_kill":
+            detector_kills += 1
+        elif kind == "watchdog_kill":
+            watchdog_kills += 1
+        elif kind == "retry":
+            retries += 1
+        elif kind == "task_unrecoverable":
+            unrecoverable += 1
+        elif kind == "task_deadline":
+            deadline_expired += 1
+        elif kind == "actor_unrecoverable":
+            actor_unrecoverable += 1
+        elif kind == "chaos":
+            chaos_events += 1
     submit_to_start, run_times, spills, locals_ = [], [], 0, 0
     for task_id, events in tl.items():
         events.sort()
@@ -87,6 +113,14 @@ def summarize(gcs: ControlPlane) -> Dict[str, float]:
         "graph_batched_tasks_mean": (graph_batched_tasks
                                      / max(graph_invocations, 1)),
         "graph_inline_chained": graph_chained,
+        "node_failures": node_failures,
+        "detector_kills": detector_kills,
+        "watchdog_kills": watchdog_kills,
+        "retries": retries,
+        "tasks_unrecoverable": unrecoverable,
+        "tasks_deadline_expired": deadline_expired,
+        "actors_unrecoverable": actor_unrecoverable,
+        "chaos_events": chaos_events,
     }
 
 

@@ -9,6 +9,7 @@ table, and pending/running tasks on the dead node are resubmitted.
 """
 from __future__ import annotations
 
+import heapq
 import itertools
 import queue
 import threading
@@ -22,7 +23,9 @@ from repro.core.memory import MemoryManager, ObjectReclaimedError
 from repro.core.object_store import MISSING, ObjectStore
 from repro.core.scheduler import (GlobalScheduler, LocalScheduler,
                                   UnschedulableActorError, _ref_ids)
-from repro.core.worker import ActorContext, Worker, execute_task
+from repro.core.worker import (ActorContext, GetTimeoutError,
+                               TaskDeadlineError, TaskUnrecoverableError,
+                               Worker, execute_task)
 
 # Bounds inline work-stealing recursion (a steal can fetch its own lost
 # args, which may steal again); past this depth fetch parks on the event.
@@ -59,8 +62,43 @@ class Node:
         self.local_scheduler = LocalScheduler(self, spill_threshold)
         self._actors: Dict[str, ActorContext] = {}
         self._actors_lock = threading.Lock()
+        # task_id -> start timestamp for everything currently executing
+        # here (workers + actor contexts). Plain dict, GIL-atomic writes:
+        # the hung-task watchdog and get()-timeout diagnostics read it
+        # from the monitor/error paths only.
+        self.inflight: Dict[str, float] = {}
+        # liveness beats: published by a dedicated beater thread when the
+        # failure detector is on; `hb_suspended` lets the chaos harness
+        # simulate a hung-but-not-crashed node (beats stop, threads run)
+        self.hb_suspended = False
+        self._hb_stop = threading.Event()
+        self._hb_thread: Optional[threading.Thread] = None
         self.workers = [Worker(self, i) for i in range(num_workers)]
         self._max_workers = max(64, 8 * num_workers)
+
+    # ----------------------------------------------------------- heartbeats
+
+    def start_heartbeat(self, interval_s: float) -> None:
+        """Publish liveness beats into the control plane's heartbeat
+        table — one batched beat per node covering all its workers and
+        actors, entirely off the task hot path."""
+        if self._hb_thread is not None:
+            return
+        self.gcs.beat(self.node_id, time.perf_counter())
+
+        def loop() -> None:
+            while not self._hb_stop.wait(interval_s):
+                if not self.alive:
+                    return
+                if not self.hb_suspended:
+                    self.gcs.beat(self.node_id, time.perf_counter())
+
+        self._hb_thread = threading.Thread(
+            target=loop, daemon=True, name=f"heartbeat-n{self.node_id}")
+        self._hb_thread.start()
+
+    def stop_heartbeat(self) -> None:
+        self._hb_stop.set()
 
     # ------------------------------------------------------------ resources
 
@@ -265,6 +303,7 @@ class Node:
         return ctxs
 
     def shutdown(self) -> None:
+        self.stop_heartbeat()
         self.drain_actors()   # closes every actor mailbox
         for w in self.workers:
             w.shutdown()
@@ -273,12 +312,137 @@ class Node:
 _cluster_epochs = itertools.count(1)
 
 
+class FailureDetector:
+    """Heartbeat failure detection + hung-task watchdog + deadline
+    monitor — one thread per cluster, nothing on the task hot path.
+
+    Nodes publish batched liveness beats into the control plane's
+    heartbeat table (`ControlPlane.beat`); the monitor thread scans them
+    every `interval_s` and declares a node dead after `miss` consecutive
+    missed beats, driving the existing `kill_node` + lineage-replay
+    path automatically (the paper's R6 without a hand-written
+    `kill_node()` call). The hung-task watchdog reads the per-node
+    in-flight start-timestamp registries the workers maintain (two
+    GIL-atomic dict ops per task) and kills a node holding any task past
+    `hung_task_timeout_s` — a slow-but-alive node keeps beating and is
+    never a false positive unless it actually exceeds the watchdog
+    bound. Deadline tracking is always available (the thread lazily
+    starts on the first `deadline=` task) even when heartbeats are off.
+    """
+
+    def __init__(self, cluster: "Cluster", interval_s: float = 0.05,
+                 miss: int = 3, hung_task_timeout_s: Optional[float] = None,
+                 enabled: bool = False):
+        self.cluster = cluster
+        self.interval = interval_s
+        self.miss = miss
+        self.hung_task_timeout_s = hung_task_timeout_s
+        self.enabled = enabled          # heartbeat publication + scanning
+        self._deadlines: List[Tuple[float, str, TaskSpec]] = []  # heap
+        self._dl_lock = threading.Lock()
+        self._start_lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------ lifecycle
+
+    def start(self) -> None:
+        """Turn on heartbeat publication for every current node and the
+        monitor thread (idempotent)."""
+        self.enabled = True
+        for node in self.cluster.nodes:
+            node.start_heartbeat(self.interval)
+        self.ensure_started()
+
+    def ensure_started(self) -> None:
+        with self._start_lock:
+            if self._thread is None and not self._stop.is_set():
+                self._thread = threading.Thread(
+                    target=self._run, daemon=True, name="failure-detector")
+                self._thread.start()
+
+    def watch_node(self, node: Node) -> None:
+        """A node joined (or was restarted): start its beater if
+        heartbeat detection is on."""
+        if self.enabled:
+            node.start_heartbeat(self.interval)
+
+    def shutdown(self) -> None:
+        self._stop.set()
+        t = self._thread
+        if t is not None:
+            t.join(timeout=2.0)
+
+    # ------------------------------------------------------------ deadlines
+
+    def track_deadline(self, spec: TaskSpec) -> None:
+        """Register a `deadline=` task for prompt expiry (submit-time,
+        off the common path — only tasks WITH a deadline ever land
+        here). The task_id is the heap tiebreak: specs don't compare."""
+        with self._dl_lock:
+            heapq.heappush(self._deadlines,
+                           (spec.created_ts + spec.deadline_s,
+                            spec.task_id, spec))
+        self.ensure_started()
+
+    def _expire_deadlines(self, now: float) -> None:
+        expired: List[TaskSpec] = []
+        with self._dl_lock:
+            while self._deadlines and self._deadlines[0][0] <= now:
+                expired.append(heapq.heappop(self._deadlines)[2])
+        for spec in expired:
+            self.cluster.expire_deadline(spec, "detector")
+
+    # ------------------------------------------------------------- monitor
+
+    def _run(self) -> None:
+        c = self.cluster
+        while not self._stop.wait(self.interval):
+            now = time.perf_counter()
+            if self.enabled:
+                horizon = self.miss * self.interval
+                for node in list(c.nodes):
+                    if not node.alive:
+                        continue
+                    last = c.gcs.heartbeat(node.node_id)
+                    if last is None or now - last <= horizon:
+                        continue
+                    # re-check identity: a concurrent restart_node may
+                    # have installed a fresh node under this id — its
+                    # first beat lands at construction, never kill it
+                    # for the old incarnation's staleness
+                    if c.nodes[node.node_id] is not node or not node.alive:
+                        continue
+                    c.gcs.log_event("detector_kill", f"node{node.node_id}",
+                                    "detector", missed_s=now - last)
+                    c.kill_node(node.node_id)
+            if self.hung_task_timeout_s:
+                for node in list(c.nodes):
+                    if not node.alive:
+                        continue
+                    hung = [tid for tid, t0 in list(node.inflight.items())
+                            if now - t0 > self.hung_task_timeout_s]
+                    if not hung:
+                        continue
+                    if c.nodes[node.node_id] is not node or not node.alive:
+                        continue
+                    c.gcs.log_event("watchdog_kill", f"node{node.node_id}",
+                                    "detector", tasks=hung)
+                    c.kill_node(node.node_id)
+            self._expire_deadlines(now)
+
+
 class Cluster:
     def __init__(self, num_nodes: int = 2, workers_per_node: int = 2,
                  resources_per_node: Optional[Dict[str, float]] = None,
                  gcs_shards: int = 8, num_global_schedulers: int = 1,
                  spill_threshold: int = 4, transfer_latency_s: float = 0.0,
-                 store_capacity_bytes: Optional[int] = None):
+                 store_capacity_bytes: Optional[int] = None,
+                 default_max_retries: int = 8,
+                 failure_detection: bool = False,
+                 heartbeat_interval_s: float = 0.05,
+                 heartbeat_miss: int = 3,
+                 hung_task_timeout_s: Optional[float] = None):
         # monotonic process-wide token: never reused across clusters (an
         # id() would be, after teardown), so per-cluster registration
         # guards compare against this
@@ -298,12 +462,26 @@ class Cluster:
         # plan-order dependents without a dataflow-gate pass.
         self._graph_invs: Dict[str, Any] = {}
         self._graph_lock = threading.Lock()
+        # failure-replay budget for tasks with max_retries=-1 (the
+        # fn.options default): a deterministic failure seals with
+        # TaskUnrecoverableError after this many attempts
+        self.default_max_retries = default_max_retries
+        # created before the first node so add_node can register beaters;
+        # the monitor thread only starts when detection is requested (or
+        # lazily, on the first deadline= task)
+        self.detector = FailureDetector(
+            self, heartbeat_interval_s, heartbeat_miss,
+            hung_task_timeout_s, enabled=False)
         self.nodes: List[Node] = []
         res = resources_per_node or {"cpu": float(workers_per_node)}
         self._node_defaults = (workers_per_node, spill_threshold,
                                transfer_latency_s, store_capacity_bytes)
         for _ in range(num_nodes):
             self.add_node(res)
+        if failure_detection:
+            self.detector.start()
+        elif hung_task_timeout_s:
+            self.detector.ensure_started()
 
     # --------------------------------------------------------------- nodes
 
@@ -313,6 +491,7 @@ class Cluster:
         res = dict(resources or {"cpu": float(w)})
         node = Node(self, len(self.nodes), res, w, spill, lat, cap)
         self.nodes.append(node)
+        self.detector.watch_node(node)
         self.drain_unschedulable()
         self._retry_parked_actors()
         return node
@@ -402,6 +581,14 @@ class Cluster:
             self._relocate_actor(old_ctx.aspec, from_node_id)
 
     def _relocate_actor(self, aspec: ActorSpec, from_node_id: int) -> None:
+        # actor replay rides the same bounded-retry policy as task
+        # lineage: an actor whose node keeps dying is re-placed and
+        # replayed at most default_max_retries times, then abandoned
+        # with typed errors on its unresolved method results
+        attempts = self.gcs.count_replay(aspec.actor_id)
+        if attempts > self.default_max_retries:
+            self._seal_actor_unrecoverable(aspec, attempts - 1)
+            return
         try:
             target = self.global_scheduler.place_actor(aspec)
         except UnschedulableActorError:
@@ -426,6 +613,29 @@ class Cluster:
             mspec = self.gcs.task_spec(tid)
             if mspec is not None:
                 new_ctx.mailbox.submit(mspec)
+
+    def _seal_actor_unrecoverable(self, aspec: ActorSpec,
+                                  attempts: int) -> None:
+        """An actor that died faster than it could be replayed is
+        abandoned: every logged-but-unresolved method result gets a
+        TaskUnrecoverableError so blocked callers fail promptly instead
+        of waiting for an incarnation that will never come."""
+        err = TaskUnrecoverableError(
+            f"actor {aspec.actor_id} ({aspec.class_name}) exhausted its "
+            f"restart budget ({attempts} restarts, max "
+            f"{self.default_max_retries})")
+        self.gcs.log_event("actor_unrecoverable", aspec.actor_id,
+                           "cluster", attempts=attempts)
+        live = self.live_nodes()
+        for _seq, tid in self.gcs.actor_log(aspec.actor_id):
+            spec = self.gcs.task_spec(tid)
+            if spec is None:
+                continue
+            for rid in spec.return_ids:
+                if live and not self._live_locs(rid):
+                    live[0].store.put(rid, err)
+            self.gcs.set_task_state(tid, TASK_DONE)
+            self.memory.on_task_done(spec)
 
     def _retry_parked_actors(self) -> None:
         with self._unsched_lock:
@@ -595,8 +805,11 @@ class Cluster:
 
         self.gcs.update(f"task_state:{spec.task_id}", trans)
         if won:
+            attempts = self._count_replay(spec, "compiled-graph node lost")
+            if not attempts:
+                return  # sealed with TaskUnrecoverableError
             self.gcs.log_event("graph_replay", spec.task_id, "lineage")
-            self.resubmit(spec)
+            self._resubmit_backoff(spec, attempts)
 
     # ------------------------------------------------------------ fetching
 
@@ -655,10 +868,27 @@ class Cluster:
                         f"lineage to reconstruct it")
                 remaining = deadline - time.perf_counter()
                 if remaining <= 0:
-                    raise TimeoutError(f"fetch({obj_id}) timed out")
+                    raise self._get_timeout(obj_id, timeout)
                 ev.wait(timeout=remaining)
         finally:
             self.gcs.unsubscribe(sub)
+
+    def _get_timeout(self, obj_id: str, timeout: float) -> GetTimeoutError:
+        """Build the typed, diagnosable timeout: the producing task, its
+        control-plane state, and (when it is mid-run) the node executing
+        it — read off the error path only."""
+        task_id = self.gcs.producing_task(obj_id)
+        state = self.gcs.task_state(task_id) if task_id else None
+        node_id = None
+        if task_id is not None:
+            node_id = next((n.node_id for n in self.nodes
+                            if task_id in n.inflight), None)
+        where = f" on node {node_id}" if node_id is not None else ""
+        return GetTimeoutError(
+            f"fetch({obj_id}) timed out after {timeout}s: producing task "
+            f"{task_id} is {state}{where}",
+            obj_id=obj_id, task_id=task_id, task_state=state,
+            node_id=node_id)
 
     def _try_steal_execute(self, obj_id: str) -> bool:
         """Work-stealing get: if obj_id's producing task is PENDING in a
@@ -800,14 +1030,134 @@ class Cluster:
         self.gcs.update(f"task_state:{task_id}", trans)
         if not won:
             return  # someone else is already replaying
-        self.gcs.log_event(
-            "reconstruct", task_id, "lineage",
-            after_evict=self.memory.was_evicted_any(spec.return_ids))
-        self.resubmit(spec)
+        after_evict = self.memory.was_evicted_any(spec.return_ids)
+        if after_evict:
+            # evict-and-reconstruct repairs a *successful* task whose
+            # output the store chose to drop — not a failure; it never
+            # counts against the replay budget (a bounded store would
+            # otherwise exhaust any budget under routine churn)
+            self.gcs.log_event("reconstruct", task_id, "lineage",
+                               after_evict=True)
+            self.resubmit(spec)
+            return
+        attempts = self._count_replay(spec, "output lost before fetch")
+        if not attempts:
+            return  # sealed with TaskUnrecoverableError
+        self.gcs.log_event("reconstruct", task_id, "lineage",
+                           after_evict=False)
+        self._resubmit_backoff(spec, attempts)
 
     def _live_locs(self, obj_id: str):
         return [n for n in self.gcs.locations(obj_id)
                 if n < len(self.nodes) and self.nodes[n].alive]
+
+    # --------------------------------------------- bounded retry policy
+
+    def retry_budget(self, spec: TaskSpec) -> int:
+        return (spec.max_retries if spec.max_retries >= 0
+                else self.default_max_retries)
+
+    def _count_replay(self, spec: TaskSpec, why: str) -> int:
+        """Count one failure-replay attempt against the task's budget.
+        Returns the attempt number (>= 1) while budget remains; on
+        exhaustion seals the task with a TaskUnrecoverableError and
+        returns 0 — the caller must not resubmit."""
+        attempts = self.gcs.count_replay(spec.task_id)
+        if attempts <= self.retry_budget(spec):
+            return attempts
+        self._seal_unrecoverable(spec, attempts - 1, why)
+        return 0
+
+    def _seal_unrecoverable(self, spec: TaskSpec, attempts: int,
+                            why: str) -> None:
+        """Replay budget spent: resolve the task *permanently* with a
+        typed error instead of spinning. Mirrors the worker's error
+        path — return ids get the error on a live node (waking blocked
+        fetchers via add_location), graph dependents are released so
+        they observe it, and the pins drop."""
+        err = TaskUnrecoverableError(
+            f"task {spec.task_id} ({spec.func_name}) exhausted its "
+            f"replay budget ({attempts} attempts, max_retries="
+            f"{self.retry_budget(spec)}): {why}")
+        self.gcs.set_task_state(spec.task_id, TASK_DONE)
+        live = self.live_nodes()
+        for rid in spec.return_ids:
+            if live and not self._live_locs(rid):
+                live[0].store.put(rid, err)
+        self.memory.on_task_done(spec)
+        self.gcs.log_event("task_unrecoverable", spec.task_id, "lineage",
+                           attempts=attempts)
+        if spec.graph_inv is not None:
+            for dep in self.graph_ready_after(spec):
+                self.graph_dispatch(dep)
+
+    def _resubmit_backoff(self, spec: TaskSpec, attempt: int) -> None:
+        """Resubmit, delayed exponentially when the task carries a
+        `backoff=` policy: attempt k waits backoff_s * 2**(k-1) (capped
+        at 5s) on a timer thread — never on the caller's thread, which
+        may be a blocked fetcher or the detector."""
+        delay = (spec.backoff_s * (2 ** (attempt - 1))
+                 if spec.backoff_s > 0 else 0.0)
+        if delay <= 0:
+            self.resubmit(spec)
+            return
+        t = threading.Timer(min(delay, 5.0), self.resubmit, args=(spec,))
+        t.daemon = True
+        t.start()
+
+    def maybe_retry_exception(self, spec: TaskSpec, exc: BaseException,
+                              where: str) -> bool:
+        """Application-level bounded retry (`retry_exceptions`): when the
+        raised exception matches the task's policy and budget remains,
+        reset the task to PENDING and resubmit with backoff instead of
+        storing a TaskError. Returns True when a retry was scheduled;
+        False hands the caller back the store-an-error path (which uses
+        TaskUnrecoverableError if the policy matched but the budget is
+        spent)."""
+        if not spec.retry_exceptions or not isinstance(
+                exc, spec.retry_exceptions):
+            return False
+        attempts = self.gcs.count_replay(spec.task_id)
+        if attempts > self.retry_budget(spec):
+            return False
+        self.gcs.set_task_state(spec.task_id, TASK_PENDING)
+        self.gcs.log_event("retry", spec.task_id, where,
+                           attempt=attempts, exc=type(exc).__name__)
+        self._resubmit_backoff(spec, attempts)
+        return True
+
+    # ------------------------------------------------------- deadlines
+
+    def expire_deadline(self, spec: TaskSpec, where: str) -> None:
+        """Resolve a deadline-expired task promptly: atomically move any
+        non-DONE state to DONE, store TaskDeadlineError on return ids
+        with no live copy, and release graph dependents (they receive
+        the error — same propagation rule as a raising task). A task
+        that completed just in time wins the race: the transition is a
+        no-op on DONE."""
+        won: List[int] = []
+
+        def trans(s):
+            if s in (TASK_PENDING, TASK_RUNNING, TASK_LOST):
+                won.append(1)
+                return TASK_DONE
+            return s
+
+        self.gcs.update(f"task_state:{spec.task_id}", trans)
+        if not won:
+            return
+        err = TaskDeadlineError(
+            f"task {spec.task_id} ({spec.func_name}) missed its "
+            f"{spec.deadline_s}s deadline")
+        live = self.live_nodes()
+        for rid in spec.return_ids:
+            if live and not self._live_locs(rid):
+                live[0].store.put(rid, err)
+        self.memory.on_task_done(spec)
+        self.gcs.log_event("task_deadline", spec.task_id, where)
+        if spec.graph_inv is not None:
+            for dep in self.graph_ready_after(spec):
+                self.graph_dispatch(dep)
 
     def resubmit(self, spec: TaskSpec) -> None:
         # re-pin the task's arguments: the DONE path unpinned them, and
@@ -858,12 +1208,18 @@ class Cluster:
 
     def _resubmit_drained(self, specs: List[TaskSpec]) -> None:
         for spec in specs:
+            if not self._count_replay(spec, "drained off a failed node"):
+                continue  # sealed with TaskUnrecoverableError
             self.gcs.set_task_state(spec.task_id, TASK_PENDING)
             self.resubmit(spec)
 
     def kill_node(self, node_id: int) -> None:
-        """Fail-stop a node: discard its objects and requeue its tasks."""
+        """Fail-stop a node: discard its objects and requeue its tasks.
+        Idempotent: the detector, the chaos harness, and a driver may
+        race to kill the same node — only the first does the work."""
         node = self.nodes[node_id]
+        if not node.alive:
+            return
         node.alive = False
         self.gcs.log_event("node_failure", f"node{node_id}", "cluster")
         lost = node.store.wipe()
@@ -891,6 +1247,7 @@ class Cluster:
         old.shutdown()
         node = Node(self, node_id, dict(old.capacity), w, spill, lat, cap)
         self.nodes[node_id] = node  # installed before resubmits target it
+        self.detector.watch_node(node)
         self.gcs.log_event("node_restart", f"node{node_id}", "cluster",
                            requeued=len(requeue))
         self._resubmit_drained(requeue)
@@ -901,6 +1258,7 @@ class Cluster:
         self.drain_unschedulable()
 
     def shutdown(self) -> None:
+        self.detector.shutdown()
         self.global_scheduler.shutdown()
         self.memory.shutdown()
         for n in self.nodes:

@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import itertools
 import threading
+import time
 from typing import TYPE_CHECKING, List, Optional
 
 from repro.core.control_plane import ControlPlane, TaskSpec
@@ -233,6 +234,14 @@ class LocalScheduler:
 
     def _schedule_ready(self, spec: TaskSpec, force_local: bool) -> None:
         node = self.node
+        if (spec.deadline_s and time.perf_counter() - spec.created_ts
+                > spec.deadline_s):
+            # already past its deadline (e.g. parked behind a dataflow
+            # gate): resolve promptly instead of burning a dispatch —
+            # one falsy attribute check for every other task
+            node.cluster.expire_deadline(
+                spec, f"node{node.node_id}/sched")
+            return
         if not node.alive or not node.satisfies(spec.resources):
             # dead node, or a resource kind this node will never have (R4)
             node.cluster.global_scheduler.submit(spec)

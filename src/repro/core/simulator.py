@@ -222,7 +222,8 @@ class ClusterSim:
 
     def __init__(self, num_nodes: int, workers_per_node: int = 8,
                  costs: SimCosts = SimCosts(), spill_threshold: int = 4,
-                 seed: int = 0, store_capacity_bytes: Optional[int] = None):
+                 seed: int = 0, store_capacity_bytes: Optional[int] = None,
+                 max_task_attempts: Optional[int] = None):
         self.costs = costs
         self.spill_threshold = spill_threshold
         self.store_capacity_bytes = store_capacity_bytes
@@ -237,6 +238,12 @@ class ClusterSim:
         self.sched_latencies: List[Tuple[str, float]] = []
         self.failures_replayed = 0
         self.actors: List[SimActor] = []
+        # bounded replay budget (mirrors the runtime's retry policy):
+        # a task already started this many times is not replayed again
+        # on node death — it lands in `failed_permanently`, the DES
+        # analogue of sealing a TaskUnrecoverableError
+        self.max_task_attempts = max_task_attempts
+        self.failed_permanently: List[SimTask] = []
 
     @property
     def evictions(self) -> int:
@@ -459,6 +466,10 @@ class ClusterSim:
         victims = list(node.running.values()) + node.backlog
         node.backlog = []
         for t in victims:
+            if (self.max_task_attempts is not None
+                    and t.attempts >= self.max_task_attempts):
+                self.failed_permanently.append(t)
+                continue
             self.failures_replayed += 1
             t.submit_node = self.rng.randrange(len(self.nodes))
             self._push(self.costs.global_sched_s, "global_place", t)
@@ -524,3 +535,67 @@ class ClusterSim:
             return {}
         pick = lambda q: lats[min(len(lats) - 1, int(q * len(lats)))]
         return {"p50": pick(0.5), "p90": pick(0.9), "p99": pick(0.99)}
+
+
+# ----------------------------------------------------------- chaos scenarios
+
+def chaos_mass_failure(num_nodes: int = 100, kill_fraction: float = 0.3,
+                       num_tasks: int = 2000, task_s: float = 1e-3,
+                       seed: int = 0, costs: SimCosts = SimCosts(),
+                       max_task_attempts: Optional[int] = None) -> Dict:
+    """Correlated mass failure at scale: a steady task stream is hit by
+    the simultaneous loss of ``kill_fraction`` of the cluster mid-run,
+    with replacement capacity joining shortly after. Validates that
+    lineage replay + elastic rebalance drain the full workload (every
+    task finishes or — under a replay budget — fails permanently, none
+    lost) and reports the replay bill."""
+    sim = ClusterSim(num_nodes, costs=costs, seed=seed,
+                     max_task_attempts=max_task_attempts)
+    rng = random.Random(seed)
+    span = num_tasks * task_s / (num_nodes * 4)
+    for i in range(num_tasks):
+        sim.submit(SimTask(task_id=i, duration_s=task_s,
+                           submit_node=rng.randrange(num_nodes)),
+                   at=rng.uniform(0.0, span))
+    t_kill = span / 2
+    killed = rng.sample(range(num_nodes), int(num_nodes * kill_fraction))
+    for nid in killed:
+        sim.kill_node(nid, at=t_kill)
+    # replacements arrive one heartbeat-ish interval later
+    for _ in killed:
+        sim.add_node(8, at=t_kill + 0.05)
+    sim.run()
+    return {"finished": len(sim.finished),
+            "failed_permanently": len(sim.failed_permanently),
+            "replayed": sim.failures_replayed,
+            "killed": len(killed),
+            "throughput": sim.throughput(),
+            "p50_sched": sim.latency_percentiles().get("p50", 0.0)}
+
+
+def chaos_rolling_restart(num_nodes: int = 100, num_tasks: int = 2000,
+                          task_s: float = 1e-3, period_s: float = 0.02,
+                          restart_gap_s: float = 0.005, seed: int = 0,
+                          costs: SimCosts = SimCosts()) -> Dict:
+    """Rolling restart sweep: every node is fail-stopped in turn, one
+    per ``period_s``, with its replacement joining ``restart_gap_s``
+    later — the DES analogue of a cluster-wide upgrade under load. The
+    workload must drain with bounded replay (each task sees at most a
+    few kills) and no permanent losses."""
+    sim = ClusterSim(num_nodes, costs=costs, seed=seed)
+    rng = random.Random(seed)
+    span = num_nodes * period_s
+    for i in range(num_tasks):
+        sim.submit(SimTask(task_id=i, duration_s=task_s,
+                           submit_node=rng.randrange(num_nodes)),
+                   at=rng.uniform(0.0, span))
+    for k in range(num_nodes):
+        sim.kill_node(k, at=(k + 1) * period_s)
+        sim.add_node(8, at=(k + 1) * period_s + restart_gap_s)
+    sim.run()
+    attempts = [t.attempts for t in sim.finished]
+    return {"finished": len(sim.finished),
+            "replayed": sim.failures_replayed,
+            "restarts": num_nodes,
+            "max_attempts": max(attempts) if attempts else 0,
+            "throughput": sim.throughput()}

@@ -20,6 +20,7 @@ from __future__ import annotations
 import copy
 import queue
 import threading
+import time
 import traceback
 from typing import TYPE_CHECKING, Any, Optional
 
@@ -43,6 +44,37 @@ def current_task() -> Optional[TaskSpec]:
 
 class TaskError(Exception):
     pass
+
+
+class TaskUnrecoverableError(TaskError):
+    """The task exhausted its replay budget (``max_retries``): the
+    runtime will not attempt it again. Stored on the task's return ids
+    like any task failure, so every current and future fetcher fails
+    promptly instead of re-triggering lineage replay forever."""
+
+
+class TaskDeadlineError(TaskError):
+    """The task's ``deadline=`` expired before it produced a result.
+    The failure detector (or the dequeueing worker) resolves the return
+    ids with this error, so getters unblock promptly instead of riding
+    their own timeout."""
+
+
+class GetTimeoutError(TimeoutError):
+    """``get(ref, timeout=)`` expired. Subclasses TimeoutError (existing
+    callers keep working) and carries the producing task's control-plane
+    state — PENDING/RUNNING/LOST plus the node currently running it —
+    so a hang under failure is diagnosable from the exception alone."""
+
+    def __init__(self, msg: str, obj_id: Optional[str] = None,
+                 task_id: Optional[str] = None,
+                 task_state: Optional[str] = None,
+                 node_id: Optional[int] = None):
+        super().__init__(msg)
+        self.obj_id = obj_id
+        self.task_id = task_id
+        self.task_state = task_state
+        self.node_id = node_id
 
 
 def execute_task(node: "Node", spec: TaskSpec, who: str) -> None:
@@ -79,7 +111,19 @@ def _execute_one(node: "Node", spec: TaskSpec,
     ready = ()
     nxt: Optional[TaskSpec] = None
     try:
+        if (spec.deadline_s
+                and time.perf_counter() - spec.created_ts > spec.deadline_s):
+            # expired before it ever ran: resolve with TaskDeadlineError
+            # instead of burning a worker on a result nobody can use
+            # (graph dependents are dispatched by expire_deadline, never
+            # chained — the deadline path is cold)
+            cluster.expire_deadline(spec, f"node{node.node_id}/{who}")
+            return None
         gcs.set_task_state(spec.task_id, TASK_RUNNING)
+        # hung-task watchdog bookkeeping: one GIL-atomic dict write here,
+        # one pop in the finally — the detector's monitor thread does all
+        # the scanning
+        node.inflight[spec.task_id] = time.perf_counter()
         gcs.log_event("start", spec.task_id,
                       f"node{node.node_id}/{who}")
         fn = gcs.function(spec.func_name)
@@ -110,11 +154,23 @@ def _execute_one(node: "Node", spec: TaskSpec,
                 # graph intermediates may have no fetcher to trigger the
                 # replay — the loss itself must resubmit
                 cluster.graph_on_lost(spec)
-    except Exception:  # noqa: BLE001
+    except Exception as exc:  # noqa: BLE001
         if node.alive:  # mirror the success path's liveness check
-            err = TaskError(
-                f"task {spec.task_id} ({spec.func_name}) failed:\n"
-                + traceback.format_exc())
+            if cluster.maybe_retry_exception(spec, exc,
+                                             f"node{node.node_id}/{who}"):
+                # bounded application-level retry (`retry_exceptions`):
+                # the task went back to PENDING and was resubmitted
+                # (after backoff) — store nothing, keep the arg pins
+                return None
+            if (spec.retry_exceptions
+                    and isinstance(exc, spec.retry_exceptions)):
+                err: TaskError = TaskUnrecoverableError(
+                    f"task {spec.task_id} ({spec.func_name}) exhausted "
+                    f"its retry budget:\n" + traceback.format_exc())
+            else:
+                err = TaskError(
+                    f"task {spec.task_id} ({spec.func_name}) failed:\n"
+                    + traceback.format_exc())
             for rid in spec.return_ids:
                 node.store.put(rid, err)
             gcs.set_task_state(spec.task_id, TASK_DONE)
@@ -139,6 +195,7 @@ def _execute_one(node: "Node", spec: TaskSpec,
     finally:
         _worker_ctx.node = prev_node
         _worker_ctx.spec = prev_spec
+        node.inflight.pop(spec.task_id, None)
         node.release(spec.resources)
         # pick at most one same-node dependent to chain into (acquire
         # its grant before the backlog can claim the freed resources);
@@ -272,6 +329,7 @@ class ActorContext(threading.Thread):
         _worker_ctx.spec = spec
         try:
             gcs.set_task_state(spec.task_id, TASK_RUNNING)
+            node.inflight[spec.task_id] = time.perf_counter()
             gcs.log_event("actor_start", spec.task_id,
                           f"node{node.node_id}/{who}")
             if self.ctor_error is not None:
@@ -315,6 +373,7 @@ class ActorContext(threading.Thread):
         finally:
             _worker_ctx.node = prev_node
             _worker_ctx.spec = prev_spec
+            node.inflight.pop(spec.task_id, None)
 
     def _graph_release(self, spec: TaskSpec) -> None:
         """A compiled-graph actor call completed: release its plain-task

@@ -153,14 +153,22 @@ class ReplicaPool:
     which is exactly the high-rate-loop shape `execute()` is built
     for."""
 
+    #: bounded per-wave redispatch: a wave that errors (replica sealed
+    #: unrecoverable) is re-run on a respawned replica at most this many
+    #: times before the error propagates to the caller
+    MAX_REDISPATCH = 2
+
     def __init__(self, engine_factory: Callable[[], "ServingEngine"],
                  num_replicas: int = 2,
                  resources: Dict[str, float] = None):
         from repro import core, dag
         self._core = core
+        self._dag = dag
+        self._engine_factory = engine_factory
         actor_cls = core.remote(ServingReplica)
         if resources is not None:
             actor_cls = actor_cls.options(resources=resources)
+        self._actor_cls = actor_cls
         self.replicas = [actor_cls.submit(engine_factory)
                          for _ in range(num_replicas)]
         self._wave_graphs = [
@@ -168,8 +176,12 @@ class ReplicaPool:
             for r in self.replicas]
         self._inflight: Dict[int, List] = {
             i: [] for i in range(num_replicas)}
+        # ref.id -> (replica idx, requests, redispatch attempt): names
+        # replica assignments in timeout errors and carries what a
+        # failed wave needs to re-run on a respawned replica
+        self._wave_meta: Dict[str, tuple] = {}
 
-    def submit_wave(self, requests: List[Request]):
+    def submit_wave(self, requests: List[Request], _attempt: int = 0):
         """Dispatch one wave (a compiled-graph invocation on the least
         loaded replica); returns the ObjectRef of its responses."""
         core = self._core
@@ -177,11 +189,25 @@ class ReplicaPool:
             if refs:
                 _, pending = core.wait(refs, num_returns=len(refs),
                                        timeout=0)
+                for r in refs:
+                    if r not in pending:
+                        self._wave_meta.pop(r.id, None)
                 self._inflight[i] = pending
         idx = min(self._inflight, key=lambda i: len(self._inflight[i]))
         ref = self._wave_graphs[idx].execute(tuple(requests))
         self._inflight[idx].append(ref)
+        self._wave_meta[ref.id] = (idx, tuple(requests), _attempt)
         return ref
+
+    def respawn_replica(self, idx: int) -> None:
+        """Replace a dead replica with a fresh actor (new engine built
+        by the stored factory) and recompile its wave plan. The old
+        incarnation's in-flight refs stay tracked by their waiters —
+        they resolve via actor replay or surface typed errors."""
+        self.replicas[idx] = self._actor_cls.submit(self._engine_factory)
+        self._wave_graphs[idx] = self._dag.compile(
+            self.replicas[idx].serve_wave.bind(self._dag.input(0)))
+        self._inflight[idx] = []
 
     def serve(self, requests: List[Request], max_wave: int = 8,
               timeout: float = 300.0) -> List[Response]:
@@ -195,6 +221,7 @@ class ReplicaPool:
         extracted: under sustained request churn the replicas' object
         stores hold only in-flight waves (bounded cache), instead of
         accreting every response batch ever served."""
+        from repro.core import TaskError
         wave_refs = [self.submit_wave(wave)
                      for wave in length_aligned_waves(requests, max_wave)]
         responses: List[Response] = []
@@ -203,13 +230,34 @@ class ReplicaPool:
         while pending:
             remaining = deadline - time.perf_counter()
             if remaining <= 0:
+                where = ", ".join(
+                    f"{r.id}->replica"
+                    f"{self._wave_meta.get(r.id, ('?',))[0]}"
+                    for r in pending)
+                # free before raising: an abandoned wave must not pin
+                # store memory for the life of the pool
+                self._core.free(pending)
+                for r in pending:
+                    self._wave_meta.pop(r.id, None)
                 raise TimeoutError(
                     f"{len(pending)} serving wave(s) incomplete after "
-                    f"{timeout}s")
+                    f"{timeout}s (pending refs freed): {where}")
             done, pending = self._core.wait(
                 pending, num_returns=1, timeout=min(remaining, 30.0))
             for ref in done:
-                responses.extend(self._core.get(ref))
+                meta = self._wave_meta.pop(ref.id, None)
+                try:
+                    responses.extend(self._core.get(ref))
+                except TaskError:
+                    # replica sealed/unrecoverable: respawn it and
+                    # re-run the wave, bounded per wave so a wave that
+                    # fails deterministically still surfaces
+                    if meta is None or meta[2] >= self.MAX_REDISPATCH:
+                        raise
+                    idx, reqs, attempt = meta
+                    self.respawn_replica(idx)
+                    pending.append(
+                        self.submit_wave(list(reqs), attempt + 1))
             if done:
                 # eager reclaim: the wait() reaping in submit_wave
                 # counts freed futures as done, so in-flight accounting
