@@ -7,15 +7,18 @@ latency, raw control-plane op latency, the stateful-actor method-call
 round trip, task throughput, a bounded-store churn loop (steady-state
 resident bytes + GC reclaim latency under sustained put→get→drop), the
 compiled-graph dispatch A/B (a 3-node chain as one `execute()` vs
-three eager submits, same window), and failure-recovery latency (node
-kill → first lineage-replayed result).
+three eager submits, same window), failure-recovery latency (node
+kill → first lineage-replayed result), and the zero-copy data plane
+A/B (materializing a 64 MiB array as a read-only view over its
+shared-memory segment vs a pickle round trip, same window — the
+process backend's reason to exist).
 
 Results land in two places:
 
   * ``benchmarks/results/microbench.json`` — this run only (feeds the DES
     simulator's cost model via ``SimCosts.from_microbench``);
   * ``BENCH_core.json`` at the repo root — the tracked perf trajectory.
-    Each invocation upserts its ``--run-name`` entry (default ``pr6``) and
+    Each invocation upserts its ``--run-name`` entry (default ``pr7``) and
     preserves the other entries (notably ``seed``, the pre-PR1 baseline),
     then recomputes speedups vs the seed. Regenerate with:
 
@@ -41,6 +44,13 @@ BENCH_FILE = REPO_ROOT / "BENCH_core.json"
 
 PAPER_TARGETS_US = {"submit": 35, "get": 110, "e2e_local": 290,
                     "e2e_remote": 1000}
+
+
+# Module level so the process backend can ship it by name to a spawned
+# worker (a closure inside run() would fail the spawn-safety check).
+@core.remote
+def proc_noop():
+    return None
 
 
 def _stats(ts):
@@ -266,6 +276,66 @@ def run(n: int = 2000) -> dict:
     out["recovery"] = {"iterations": len(ts), **_stats(ts)} if ts else {}
     core.shutdown()
 
+    # 13. zero-copy data plane: materializing a 64 MiB array from the
+    #     process backend's shared-memory store vs a pickle round trip
+    #     of the same array, A/B in the same window. get() under
+    #     backend="process" hands out a read-only numpy view over the
+    #     shm segment (np.frombuffer — no copy); pickle copies the
+    #     64 MiB at least twice. The view is rebuilt through a fresh
+    #     Payload each iteration so the decode-once cache cannot hide
+    #     the cost. Store-level on purpose: no child process in the
+    #     timed region — this isolates the data plane itself.
+    import pickle
+
+    import numpy as np
+
+    from repro.core.control_plane import ControlPlane
+    from repro.core.object_store import SharedMemoryStore
+    from repro.core.serialization import Payload
+
+    zc_gcs = ControlPlane(1)
+    zc_store = SharedMemoryStore(0, zc_gcs)
+    arr = np.zeros(16 * 1024 * 1024, dtype=np.float32)   # 64 MiB
+    zc_store.put("zc", arr)
+    base = zc_store.payload_of("zc")
+    seg_buf = base.ensure_buffer()
+    m = max(n // 100, 10)
+    view_ts, pkl_ts = [], []
+    view = rt = None
+    for _ in range(m):
+        t0 = time.perf_counter()
+        view = Payload.from_buffer(base.kind, base.meta, seg_buf).value()
+        view_ts.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        rt = pickle.loads(pickle.dumps(arr, protocol=5))
+        pkl_ts.append(time.perf_counter() - t0)
+    assert view.shape == arr.shape and not view.flags.writeable
+    assert rt.shape == arr.shape
+    view_s, pkl_s = _stats(view_ts), _stats(pkl_ts)
+    out["zero_copy"] = {
+        "bytes": int(arr.nbytes),
+        "view": view_s,
+        "pickle_roundtrip": pkl_s,
+        # same-window ratio; acceptance floor is 10x, reality is ~1000x
+        "speedup_vs_pickle": round(pkl_s["p50_us"] / view_s["p50_us"], 1)
+        if view_s["p50_us"] else 0.0,
+    }
+    del view, rt, seg_buf, base
+    zc_store.close()
+
+    # 13b. process-backend dispatch: warm empty-task e2e through a
+    #     spawned worker process (shm instruction + completion rings,
+    #     function already shipped). One worker on purpose: this box
+    #     has a single core, so a wider pool would measure
+    #     oversubscription, not scaling — per-task dispatch overhead is
+    #     the honest number either way.
+    cluster = core.init(num_nodes=1, workers_per_node=1,
+                        spill_threshold=4096, backend="process")
+    core.get(proc_noop.submit())       # warm: spawn + fn ship + rings hot
+    out["proc_e2e"] = _bench(lambda: core.get(proc_noop.submit()),
+                             max(n // 20, 30), warmup=5)
+    core.shutdown()
+
     out["paper_targets_us"] = PAPER_TARGETS_US
     return out
 
@@ -301,6 +371,10 @@ def update_bench_file(measurements: dict, run_name: str = "pr1",
         if gstep:
             # same-window A/B, not a vs-seed ratio (seed has no dag API)
             speedup["graph_step_vs_eager"] = gstep["speedup_vs_eager"]
+        zc = cur.get("zero_copy")
+        if zc:
+            # same-window A/B (seed has no shared-memory store)
+            speedup["zero_copy_vs_pickle"] = zc["speedup_vs_pickle"]
         doc["speedup_vs_seed"] = speedup
         doc["speedup_run"] = run_name
     path.write_text(json.dumps(doc, indent=1) + "\n")
@@ -310,7 +384,7 @@ def update_bench_file(measurements: dict, run_name: str = "pr1",
 def check_regression(measurements: dict, ref_run: str,
                      path: Path = BENCH_FILE,
                      keys=("e2e_remote", "wait_one", "actor_call",
-                           "churn", "graph_step"),
+                           "churn", "graph_step", "zero_copy"),
                      slack: float = None) -> bool:
     """CI guard: the hop-free remote path, the wait notify path, the
     actor method-call path, the memory-governance churn loop, and the
@@ -322,7 +396,10 @@ def check_regression(measurements: dict, ref_run: str,
     iterations (a data-plane leak) or any reclaim timed out; the
     graph_step check additionally fails when the compiled 3-node chain
     is not cheaper than the eager 3-submit chain in the *same
-    measurement window* (the whole point of batched dispatch). The
+    measurement window* (the whole point of batched dispatch); the
+    zero_copy check is an absolute same-window floor — the
+    shared-memory view of a 64 MiB array must be >= 10x cheaper than a
+    pickle round trip, or the "zero-copy" path is copying. The
     slack factor absorbs CI-machine jitter (override via
     BENCH_REGRESSION_SLACK)."""
     if slack is None:
@@ -360,6 +437,21 @@ def check_regression(measurements: dict, ref_run: str,
                       f"committed {committed:.1f}us (limit {limit:.1f}us) "
                       f"{'ok' if good else 'REGRESSION'}")
                 ok = ok and good
+            continue
+        if key == "zero_copy":
+            cur_zc = measurements.get("zero_copy")
+            if not cur_zc:
+                continue
+            ratio = cur_zc.get("speedup_vs_pickle", 0.0)
+            # absolute floor, independent of the reference run: the
+            # shared-memory view must beat a pickle round trip of the
+            # same 64 MiB by >= 10x in the same measurement window, or
+            # the zero-copy path is copying
+            good = ratio >= 10.0
+            print(f"bench-check zero_copy: view vs pickle {ratio:.1f}x "
+                  f"(floor 10.0x, same window) "
+                  f"{'ok' if good else 'NOT ZERO-COPY'}")
+            ok = ok and good
             continue
         if key == "graph_step":
             cur_gs = measurements.get("graph_step")
@@ -434,6 +526,16 @@ def rows():
     if out.get("recovery"):
         yield ("microbench.recovery_us", out["recovery"]["p50_us"],
                "kill -> first replayed result")
+    if out.get("zero_copy"):
+        yield ("microbench.zero_copy_view_us",
+               out["zero_copy"]["view"]["p50_us"],
+               "64 MiB shm view (read-only, no copy)")
+        yield ("microbench.zero_copy_pickle_us",
+               out["zero_copy"]["pickle_roundtrip"]["p50_us"],
+               "64 MiB pickle round trip (same window)")
+    if out.get("proc_e2e"):
+        yield ("microbench.proc_e2e_us", out["proc_e2e"]["p50_us"],
+               "process-backend empty task e2e")
 
 
 def main() -> None:
@@ -443,7 +545,7 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="quick CI run: small n, does not touch "
                          "BENCH_core.json")
-    ap.add_argument("--run-name", default="pr6",
+    ap.add_argument("--run-name", default="pr7",
                     help="entry name in BENCH_core.json")
     ap.add_argument("--out", default=None,
                     help="override BENCH_core.json path")

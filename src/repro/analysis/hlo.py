@@ -168,8 +168,12 @@ def parse_computations(text: str) -> Dict[str, Computation]:
             # parameter lines: `%p = f32[...] parameter(0)` match; others skip
             continue
         name, tstr, op, opnds, attrs = m.groups()
-        operands = [o.strip().lstrip("%") for o in opnds.split(",")
-                    if o.strip().startswith("%")]
+        # Operand chunks are `%name` in older HLO dumps but
+        # `f32[64,64]{1,0} %name` (typed) in newer ones — extract every
+        # %-prefixed identifier rather than requiring the chunk to start
+        # with one. Metadata/attrs live in a separate group, so any `%`
+        # seen here is a real operand reference.
+        operands = re.findall(r"%([\w.\-]+)", opnds)
         ins = Instr(name, tstr, op, operands, attrs, operands_raw=opnds,
                     is_root=line.lstrip().startswith("ROOT"))
         ins.result_bytes, ins.result_elems = _type_bytes_elems(tstr)

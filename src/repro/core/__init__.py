@@ -11,12 +11,16 @@ from repro.core.api import (ActorClass, ActorHandle, ObjectRef,  # noqa: F401
                             RemoteFunction, attach, free, get, init, put,
                             remote, shutdown, wait)
 from repro.core import dag  # noqa: F401
+from repro.core.backends import (ExecutionBackend,  # noqa: F401
+                                 ProcessBackend, ShmRing, ThreadBackend)
 from repro.core.chaos import ChaosEvent, FaultInjector  # noqa: F401
 from repro.core.control_plane import (ActorSpec, ControlPlane,  # noqa: F401
                                       TaskSpec)
 from repro.core.dag import CompiledGraph, GraphNode  # noqa: F401
 from repro.core.memory import (MemoryManager,  # noqa: F401
                                ObjectReclaimedError, sizeof)
+from repro.core.object_store import (ObjectStore,  # noqa: F401
+                                     SharedMemoryStore, SpawnSafetyError)
 from repro.core.runtime import Cluster, FailureDetector, Node  # noqa: F401
 from repro.core.worker import (ActorContext, GetTimeoutError,  # noqa: F401
                                TaskDeadlineError, TaskError,

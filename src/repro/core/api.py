@@ -106,6 +106,39 @@
      The seeded chaos harness (``repro.core.chaos.FaultInjector``)
      exercises all of the above against a live cluster with
      deterministic kill/restart/delay/drop schedules.
+  10. Process model — execution backends are pluggable per cluster:
+
+          init(..., backend="thread")   # default: in-process workers
+          init(..., backend="process")  # spawned worker processes over
+                                        # a shared-memory object store
+
+      The thread backend runs tasks on threads in the driver process —
+      zero serialization, every Python object legal, but all task CPU
+      shares one GIL. The process backend spawns real worker processes
+      (spawn context) fed through per-worker shared-memory instruction
+      rings; large values (>= 64 KiB) live in named shared-memory
+      segments, and ``get()`` of a stored array returns a **read-only,
+      zero-copy numpy view** over the segment — mutating it raises;
+      copy (``arr.copy()``) or ``put()`` a new object instead. Choose
+      the process backend for CPU-bound tasks over large arrays (true
+      parallelism, no 64 MiB pickles); stay on threads for small/latency
+      -sensitive tasks, closures, or unpicklable values.
+
+      Spawn-safety contract (process backend): scripts must guard
+      cluster creation with ``if __name__ == "__main__":`` (standard
+      spawn rule — the child re-imports the main module, and an
+      unguarded ``init`` would recursively spawn there); remote
+      functions must be
+      module-level (shipped by name or by pickle — ``<locals>`` closures
+      are rejected with a ``SpawnSafetyError`` naming the function);
+      task arguments and results must pickle (unpicklable values are
+      rejected at dispatch, again by name). Actors run parent-side in
+      both backends (their state never crosses the boundary), and
+      nested ``submit()``/``get()`` inside a process-backend task is
+      unsupported. A worker process dying mid-task is handled like a
+      node failure: its in-flight tasks are replayed via lineage, and
+      with ``failure_detection=True`` a node whose children all died
+      stops heartbeating and is fail-stopped by the monitor.
 
 Usage:
     cluster = init(num_nodes=4, workers_per_node=2)

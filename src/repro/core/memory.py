@@ -73,15 +73,17 @@ def _interpreter_finalizing() -> bool:
 #: 0 for a real ``None`` value, conflating it with a missing object).
 _PRIMITIVE_BYTES = 32
 _CONTAINER_BYTES = 64
-_ARRAY_OVERHEAD = 96
 _MAX_SIZEOF_DEPTH = 4
 
 
 def sizeof(value) -> int:
-    """Byte footprint of a stored value: ``nbytes`` for array-likes,
-    a bounded recursive estimate for containers, ``sys.getsizeof`` as
-    the fallback. Deliberately cheap and deterministic — accounting,
-    not forensics."""
+    """Byte footprint of a stored value: exactly ``nbytes`` for
+    array-likes (matching the serialized buffer length the store
+    actually holds — see ``serialization.Payload``, which reports the
+    same number, so pin accounting and store accounting agree to the
+    byte), a bounded recursive estimate for containers,
+    ``sys.getsizeof`` as the fallback. Deliberately cheap and
+    deterministic — accounting, not forensics."""
     return _sizeof(value, 0)
 
 
@@ -89,12 +91,16 @@ def _sizeof(value, depth: int) -> int:
     nb = getattr(value, "nbytes", None)
     if nb is not None:
         try:
-            return int(nb) + _ARRAY_OVERHEAD
+            return int(nb)
         except (TypeError, ValueError):  # pragma: no cover - exotic .nbytes
             pass
     if value is None or isinstance(value, (bool, int, float, complex)):
         return _PRIMITIVE_BYTES
-    if isinstance(value, (str, bytes, bytearray)):
+    if isinstance(value, (bytes, bytearray)):
+        # exact: the stored buffer IS the value (serialization.Payload
+        # BYTES kind) — pin accounting must match store accounting
+        return len(value)
+    if isinstance(value, str):
         return _PRIMITIVE_BYTES + len(value)
     if isinstance(value, (list, tuple, set, frozenset)):
         if depth >= _MAX_SIZEOF_DEPTH:

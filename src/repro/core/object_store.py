@@ -1,27 +1,38 @@
-"""Per-node in-memory object store (the paper's shared-memory store).
+"""Per-node object store (the paper's shared-memory store).
 
-Holds task outputs as host objects (numpy/jax arrays or arbitrary Python
-values). Intra-node reads are zero-copy; inter-node reads "transfer" the
-object (a copy plus an optional modeled latency, standing in for
-plasma-over-network in the paper's architecture). Locations are tracked in
-the control plane's object table so schedulers can place tasks near their
-inputs (locality-aware scheduling) and so lineage replay knows what was
-lost when a node dies.
+Buffer-first: every stored value is classified once into a ``Payload``
+(header + contiguous buffer — see ``serialization.py``), so the store
+accounts *exact* buffer bytes for array-likes and serialized values,
+and inter-node transfer moves bytes, not live Python objects. Two
+variants:
 
-Memory governance: the store is a *bounded, accounted LRU cache*. Every
-put records a ``sizeof`` footprint; when `capacity_bytes` is set and an
-insert would exceed it, least-recently-used objects are evicted in
-priority order (dead → secondary replica → reconstructible last copy —
-the MemoryManager classifies; pinned in-flight arguments and referenced
-last copies with no lineage are never evicted, so capacity is a soft cap
-under pure-protected contents). An evicted last copy of a referenced
-object is repaired transparently by lineage replay on the next fetch.
+  * ``ObjectStore`` — the in-process (thread backend) store. The live
+    object rides along in the payload, so intra-node reads stay
+    zero-cost and identity-preserving, and unpicklable values are legal
+    (held by reference; they never cross a process boundary).
+  * ``SharedMemoryStore`` — the process-backend store. Buffers at or
+    above ``SEGMENT_THRESHOLD`` live in ``multiprocessing.shared_memory``
+    segments that worker processes attach to directly: a ``get()`` of a
+    large array is a zero-copy, read-only ``np.frombuffer`` view on both
+    sides of the process boundary. Small buffers stay inline (a segment
+    per tiny object would exhaust fds for nothing).
+
+Memory governance is unchanged from PR 4: the store is a *bounded,
+accounted LRU cache*. Every put records the payload's byte footprint;
+when `capacity_bytes` is set and an insert would exceed it,
+least-recently-used objects are evicted in priority order (dead →
+secondary replica → reconstructible last copy — the MemoryManager
+classifies; pinned in-flight arguments and referenced last copies with
+no lineage are never evicted, so capacity is a soft cap under
+pure-protected contents). An evicted last copy of a referenced object is
+repaired transparently by lineage replay on the next fetch.
 
 A wiped store (node death) refuses all further puts — a transfer racing
 the wipe must not resurrect data or locations on a dead node.
 """
 from __future__ import annotations
 
+import atexit
 import itertools
 import threading
 import time
@@ -29,7 +40,8 @@ from collections import OrderedDict
 from typing import TYPE_CHECKING, Any, Dict, List, Optional, Tuple
 
 from repro.core.control_plane import ControlPlane
-from repro.core.memory import sizeof
+from repro.core.serialization import (BYTES, ND, PKL, RAW, Payload,
+                                      SpawnSafetyError)
 
 if TYPE_CHECKING:  # pragma: no cover
     from repro.core.memory import MemoryManager
@@ -50,6 +62,10 @@ MISSING = _Missing()
 # over capacity rather than stalling the hot path on a full-store scan.
 _MAX_EVICT_SCAN = 256
 
+#: Buffers at/above this land in their own shared-memory segment; below
+#: it they ride inline (in the payload / the instruction ring record).
+SEGMENT_THRESHOLD = 64 * 1024
+
 
 class ObjectStore:
     def __init__(self, node_id: int, gcs: ControlPlane,
@@ -63,7 +79,7 @@ class ObjectStore:
         self.memory = memory
         self._lock = threading.Lock()
         # insertion/touch order IS the LRU order: oldest first
-        self._data: "OrderedDict[str, Any]" = OrderedDict()
+        self._data: "OrderedDict[str, Payload]" = OrderedDict()
         self._sizes: Dict[str, int] = {}
         self._used = 0
         self._wiped = False
@@ -94,9 +110,8 @@ class ObjectStore:
 
     def bytes_of(self, obj_id: str) -> int:
         """Recorded footprint of a resident object; 0 when absent. Reads
-        the size table, not the value — a stored ``None`` (footprint
-        ``sizeof(None)`` > 0) is no longer conflated with a missing
-        object the way the old ``get(...) is None`` probe did."""
+        the size table, not the value — a stored ``None`` (a nonzero
+        pickled footprint) is never conflated with a missing object."""
         with self._lock:
             return self._sizes.get(obj_id, 0)
 
@@ -107,28 +122,38 @@ class ObjectStore:
         `capacity_bytes`. Returns False (and stores nothing) on a wiped
         store — a transfer that raced node death must not resurrect
         data there."""
-        size = sizeof(value)
+        return self.put_payload(obj_id, self._encode(value))
+
+    def _encode(self, value: Any) -> Payload:
+        """Classify a value (exact buffer bytes for array-likes, no
+        serialization work on the hot path — the thread store keeps the
+        live object and serializes lazily if a transfer needs bytes)."""
+        return Payload.wrap(value)
+
+    def put_payload(self, obj_id: str, payload: Payload) -> bool:
+        size = payload.nbytes
         with self._lock:
             if self._wiped:
+                self._release_payload_now(payload)
                 return False
             old = self._sizes.pop(obj_id, None)
             if old is not None:
-                del self._data[obj_id]
+                self._release_payload(self._data.pop(obj_id))
                 self._used -= old
-            evicted: List[Tuple[str, int, bool]] = []
+            evicted: List[Tuple[str, Payload, bool]] = []
             if (self.capacity_bytes is not None
                     and self._used + size > self.capacity_bytes):
                 evicted = self._evict_locked(
                     self._used + size - self.capacity_bytes)
-            self._data[obj_id] = value
+            self._data[obj_id] = payload
             self._sizes[obj_id] = size
             self._used += size
-        for oid, sz, dead in evicted:
-            self._deregister_evicted(oid, sz, dead)
+        for oid, pl, dead in evicted:
+            self._deregister_evicted(oid, pl, dead)
         self.gcs.add_location(obj_id, self.node_id)
         return True
 
-    def _evict_locked(self, need: int) -> List[Tuple[str, int, bool]]:
+    def _evict_locked(self, need: int) -> List[Tuple[str, Payload, bool]]:
         """Pick >= `need` bytes of LRU victims, classified by the memory
         manager: dead objects first, then secondary replicas, then
         reconstructible last copies. Pops them from the table; the
@@ -150,19 +175,22 @@ class ObjectStore:
                 secondary.append(oid)
             elif cls == "reconstructible":
                 recon.append(oid)
-        victims: List[Tuple[str, int, bool]] = []
+        victims: List[Tuple[str, Payload, bool]] = []
         freed = 0
         for oid in itertools.chain(dead, secondary, recon):
             if freed >= need:
                 break
             sz = self._sizes.pop(oid)
-            del self._data[oid]
+            payload = self._data.pop(oid)
             self._used -= sz
             freed += sz
-            victims.append((oid, sz, oid in dead))
+            victims.append((oid, payload, oid in dead))
         return victims
 
-    def _deregister_evicted(self, oid: str, size: int, dead: bool) -> None:
+    def _deregister_evicted(self, oid: str, payload: Payload,
+                            dead: bool) -> None:
+        size = payload.nbytes
+        self._release_payload(payload)
         self.gcs.remove_locations(oid, [self.node_id])
         self.evictions += 1
         if self.memory is not None:
@@ -181,34 +209,46 @@ class ObjectStore:
         with self._lock:
             return obj_id in self._data
 
-    def get_local(self, obj_id: str) -> Any:
+    def payload_of(self, obj_id: str) -> Payload:
+        """The resident payload (LRU touch); KeyError when absent —
+        transfer and dispatch paths move payloads, not live values."""
         with self._lock:
-            value = self._data[obj_id]
-            self._data.move_to_end(obj_id)  # LRU touch
-            return value
+            payload = self._data[obj_id]
+            self._data.move_to_end(obj_id)
+            return payload
+
+    def get_local(self, obj_id: str) -> Any:
+        return self.payload_of(obj_id).value()
 
     def get_if_present(self, obj_id: str, default: Any = MISSING) -> Any:
         """Single-lock conditional read — the node-local fast path.
         Returns `default` when the object is not resident (values may be
         None, so callers should compare against the MISSING sentinel)."""
         with self._lock:
-            value = self._data.get(obj_id, MISSING)
-            if value is MISSING:
+            payload = self._data.get(obj_id)
+            if payload is None:
                 return default
             self._data.move_to_end(obj_id)  # LRU touch
-            return value
+        return payload.value()
 
     # -------------------------------------------------------------- transfer
 
     def fetch_from(self, other: "ObjectStore", obj_id: str) -> Any:
-        """Inter-node transfer: copies the value into this store (unless
-        this store was wiped concurrently — the value is still returned
-        to the caller, but a dead store caches nothing)."""
-        value = other.get_local(obj_id)
+        """Inter-node transfer: copies the payload into this store
+        (unless this store was wiped concurrently — the value is still
+        returned to the caller, but a dead store caches nothing)."""
+        payload = other.payload_of(obj_id)   # KeyError when absent
         if self.transfer_latency_s:
             time.sleep(self.transfer_latency_s)
-        self.put(obj_id, value)
-        return value
+        self.put_payload(obj_id, self._import_payload(payload))
+        return payload.value()
+
+    def _import_payload(self, payload: Payload) -> Payload:
+        """How a transferred payload lands here. The in-process store
+        shares it outright (same interpreter — this is the pre-existing
+        by-reference transfer semantics); the shared-memory subclass
+        copies the bytes into its own segment."""
+        return payload
 
     def prefetch_from(self, other: "ObjectStore", obj_id: str) -> bool:
         """Best-effort transfer for eager argument push at placement
@@ -228,11 +268,11 @@ class ObjectStore:
         transfer that raced a node kill — a wiped store must stay
         empty — and by the GC's cluster-wide reclaim)."""
         with self._lock:
-            present = obj_id in self._data
-            if present:
-                del self._data[obj_id]
+            payload = self._data.pop(obj_id, None)
+            if payload is not None:
                 self._used -= self._sizes.pop(obj_id, 0)
-        if present:
+                self._release_payload(payload)
+        if payload is not None:
             self.gcs.remove_locations(obj_id, [self.node_id])
 
     def wipe(self) -> int:
@@ -242,9 +282,197 @@ class ObjectStore:
         with self._lock:
             self._wiped = True
             ids = list(self._data)
+            for payload in self._data.values():
+                self._release_payload(payload)
             self._data.clear()
             self._sizes.clear()
             self._used = 0
         for oid in ids:
             self.gcs.remove_locations(oid, [self.node_id])
         return len(ids)
+
+    def close(self) -> None:
+        """Release backing resources at node shutdown (no-op for the
+        in-process store; the shared-memory store unlinks segments)."""
+
+    # ------------------------------------------------- payload lifecycle
+
+    def _release_payload(self, payload: Payload) -> None:
+        """Called (under the store lock) whenever a payload leaves the
+        table. The base store holds no external resources."""
+
+    def _release_payload_now(self, payload: Payload) -> None:
+        """Release a payload that never entered the table (a put that
+        lost the race with wipe)."""
+        self._release_payload(payload)
+
+
+class SharedMemoryStore(ObjectStore):
+    """Object store whose large buffers live in named
+    ``multiprocessing.shared_memory`` segments, attachable by worker
+    processes: ``get()`` of a large array — in the driver process or in
+    a worker — is a zero-copy, read-only view over the segment.
+
+    Lifetime: this store (the node, i.e. the parent process) owns every
+    segment it created or adopted, and unlinks it when the object is
+    evicted/discarded/wiped or the store closes — exactly once, by
+    exactly one owner (see ``create_segment`` for the resource-tracker
+    policy); an atexit sweep covers clusters that were never shut
+    down. A view handed out by ``get()``
+    keeps its mapping alive even after the unlink (POSIX semantics), but
+    a segment whose exported views are still referenced at release time
+    is parked on a zombie list and retried at close.
+    """
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self._zombies: List[Any] = []
+        self._closed = False
+        atexit.register(self.close)
+
+    # ------------------------------------------------------------ encoding
+
+    def _encode(self, value: Any) -> Payload:
+        """Serialize eagerly and move the buffer into a segment (>=
+        SEGMENT_THRESHOLD) or an inline bytes copy. Unpicklable values
+        stay by-reference (parent-process-only — the dispatch path
+        rejects them with a SpawnSafetyError if a worker process would
+        need them)."""
+        payload = Payload.wrap(value)
+        return self._materialize(payload)
+
+    def _materialize(self, payload: Payload) -> Payload:
+        buf = payload.ensure_buffer(strict=False)
+        if buf is None:            # RAW: by-reference, parent-only
+            return payload
+        if payload.nbytes >= SEGMENT_THRESHOLD:
+            shm = create_segment(payload.nbytes)
+            shm.buf[:payload.nbytes] = buf
+            out = Payload.from_buffer(payload.kind, payload.meta,
+                                      shm.buf[:payload.nbytes],
+                                      segment=shm.name, shm=shm)
+        else:
+            out = Payload.from_buffer(payload.kind, payload.meta,
+                                      bytes(buf))
+        return out
+
+    def _import_payload(self, payload: Payload) -> Payload:
+        # inter-node transfer: copy the bytes into a segment/inline copy
+        # of our own — segments are per-node-owned, a shared segment
+        # would outlive its owner's wipe
+        return self._materialize(payload)
+
+    # ---------------------------------------------------------- descriptors
+
+    def descriptor(self, obj_id: str) -> Tuple:
+        """Compact cross-process reference for the instruction ring:
+        ``("seg", kind, meta, name, nbytes)`` for segment-backed
+        payloads, ``("inl", kind, meta, bytes)`` for inline ones.
+        Raises SpawnSafetyError for by-reference payloads and KeyError
+        when absent."""
+        payload = self.payload_of(obj_id)
+        if payload.kind == RAW:
+            payload.ensure_buffer(strict=True)  # raises SpawnSafetyError
+        if payload.segment is not None:
+            return ("seg", payload.kind, payload.meta, payload.segment,
+                    payload.nbytes)
+        return ("inl", payload.kind, payload.meta,
+                bytes(payload.ensure_buffer(strict=True)))
+
+    def adopt_result(self, obj_id: str, desc: Tuple) -> bool:
+        """Adopt a worker-produced result descriptor: attach (and take
+        ownership of) the child-created segment, or wrap the inline
+        bytes. The child never unlinks — the store owns every adopted
+        segment exactly like one it created."""
+        if desc[0] == "seg":
+            _tag, kind, meta, name, nbytes = desc
+            shm = attach_segment(name)
+            payload = Payload.from_buffer(kind, meta, shm.buf[:nbytes],
+                                          segment=name, shm=shm)
+        else:
+            _tag, kind, meta, raw = desc
+            payload = Payload.from_buffer(kind, meta, raw)
+        return self.put_payload(obj_id, payload)
+
+    # ------------------------------------------------------------ lifecycle
+
+    def _release_payload(self, payload: Payload) -> None:
+        shm = payload._shm
+        if shm is None:
+            return
+        payload._shm = None
+        payload._buffer = None
+        try:
+            shm.close()
+        except BufferError:
+            # a read-only view handed out by get() is still alive: the
+            # mapping must outlive it. Unlink the name now (no new
+            # attaches) and retry the close at store close.
+            self._zombies.append(shm)
+            try:
+                shm.unlink()
+            except FileNotFoundError:  # pragma: no cover
+                pass
+            return
+        try:
+            shm.unlink()
+        except FileNotFoundError:  # pragma: no cover - already gone
+            pass
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        with self._lock:
+            self._wiped = True
+            for payload in self._data.values():
+                self._release_payload(payload)
+            self._data.clear()
+            self._sizes.clear()
+            self._used = 0
+            zombies, self._zombies = self._zombies, []
+        for shm in zombies:
+            try:
+                shm.close()
+                shm.unlink()
+            except FileNotFoundError:
+                pass
+            except BufferError:
+                # a user still holds a view: the mapping must live until
+                # process exit. Park the handle so its __del__ (which
+                # would retry the close and print an ignored-exception
+                # traceback at shutdown) never runs.
+                _UNDEAD.append(shm)
+
+
+# --------------------------------------------------------- segment helpers
+
+#: Segment handles whose mapping cannot be closed because exported
+#: views are still referenced (zero-copy get() results held by the
+#: user). Keeping the handle referenced suppresses the noisy
+#: ``__del__``-time close retry; the OS reclaims the mapping at exit.
+_UNDEAD: List[Any] = []
+
+
+def create_segment(nbytes: int):
+    """Create a shared-memory segment. Lifetime policy: the resource
+    tracker's registry is a *set* shared by the parent and its spawned
+    workers, and ``unlink()`` unregisters — so as long as exactly one
+    owner unlinks each segment exactly once (this store does, at
+    evict/discard/wipe/close), attach-side auto-registrations are
+    absorbed and the tracker never double-unlinks nor warns. Nobody
+    calls ``resource_tracker.unregister`` by hand."""
+    from multiprocessing import shared_memory
+    return shared_memory.SharedMemory(create=True, size=max(1, nbytes))
+
+
+def attach_segment(name: str):
+    """Attach to an existing segment (see ``create_segment`` for the
+    ownership/unlink policy)."""
+    from multiprocessing import shared_memory
+    return shared_memory.SharedMemory(name=name)
+
+
+__all__ = ["MISSING", "ObjectStore", "SharedMemoryStore",
+           "SEGMENT_THRESHOLD", "create_segment", "attach_segment",
+           "SpawnSafetyError", "Payload", "ND", "BYTES", "PKL", "RAW"]

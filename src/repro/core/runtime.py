@@ -19,8 +19,11 @@ from typing import Any, Dict, List, Optional, Tuple
 from repro.core.control_plane import (TASK_DONE, TASK_LOST, TASK_PENDING,
                                       TASK_RUNNING, ActorSpec, ControlPlane,
                                       TaskSpec)
+from repro.core.backends import (ExecutionBackend, ProcessBackend,
+                                 ThreadBackend)
 from repro.core.memory import MemoryManager, ObjectReclaimedError
-from repro.core.object_store import MISSING, ObjectStore
+from repro.core.object_store import (MISSING, ObjectStore,
+                                     SharedMemoryStore)
 from repro.core.scheduler import (GlobalScheduler, LocalScheduler,
                                   UnschedulableActorError, _ref_ids)
 from repro.core.worker import (ActorContext, GetTimeoutError,
@@ -43,7 +46,8 @@ class Node:
                  resources: Dict[str, float], num_workers: int,
                  spill_threshold: int = 4,
                  transfer_latency_s: float = 0.0,
-                 store_capacity_bytes: Optional[int] = None):
+                 store_capacity_bytes: Optional[int] = None,
+                 backend: str = "thread"):
         self.cluster = cluster
         self.node_id = node_id
         self.gcs = cluster.gcs
@@ -55,9 +59,14 @@ class Node:
         # standing actor grants: capacity that never returns to the pool
         # while the actor lives — scheduling must not queue tasks behind it
         self._actor_reserved: Dict[str, float] = {}
-        self.store = ObjectStore(node_id, cluster.gcs, transfer_latency_s,
-                                 capacity_bytes=store_capacity_bytes,
-                                 memory=cluster.memory)
+        # the process backend needs segment-backed buffers (worker
+        # processes attach to them); the thread backend keeps the
+        # zero-cost in-process store
+        store_cls = SharedMemoryStore if backend == "process" \
+            else ObjectStore
+        self.store = store_cls(node_id, cluster.gcs, transfer_latency_s,
+                               capacity_bytes=store_capacity_bytes,
+                               memory=cluster.memory)
         self.run_queue: "queue.Queue[Optional[TaskSpec]]" = queue.Queue()
         self.local_scheduler = LocalScheduler(self, spill_threshold)
         self._actors: Dict[str, ActorContext] = {}
@@ -73,8 +82,19 @@ class Node:
         self.hb_suspended = False
         self._hb_stop = threading.Event()
         self._hb_thread: Optional[threading.Thread] = None
-        self.workers = [Worker(self, i) for i in range(num_workers)]
+        # execution backend: how dispatched specs turn into running
+        # code. The run_queue/workers attributes always exist (the
+        # work-stealing get() path scans run_queue directly; under the
+        # process backend both simply stay empty).
+        self.backend_name = backend
+        self.workers: List[Worker] = []
         self._max_workers = max(64, 8 * num_workers)
+        if backend == "process":
+            self.backend: "ExecutionBackend" = ProcessBackend(
+                self, num_workers)
+        else:
+            self.backend = ThreadBackend(self, num_workers)
+        self.backend.start()
 
     # ----------------------------------------------------------- heartbeats
 
@@ -89,6 +109,11 @@ class Node:
         def loop() -> None:
             while not self._hb_stop.wait(interval_s):
                 if not self.alive:
+                    return
+                if not self.backend.healthy():
+                    # a worker process died: stop beating so the failure
+                    # detector fail-stops this node exactly like a dead
+                    # machine (drain + lineage replay elsewhere)
                     return
                 if not self.hb_suspended:
                     self.gcs.beat(self.node_id, time.perf_counter())
@@ -175,7 +200,7 @@ class Node:
             self._res_cond.notify_all()
 
     def load(self) -> float:
-        return float(self.run_queue.qsize()
+        return float(self.backend.queued()
                      + self.local_scheduler.backlog_len())
 
     # --------------------------------------------------- blocked workers
@@ -186,10 +211,7 @@ class Node:
     def enter_blocked(self, spec: Optional[TaskSpec]) -> None:
         if spec is not None:
             self.release(spec.resources)
-        if (len(self.workers) < self._max_workers
-                and (self.run_queue.qsize() > 0
-                     or self.local_scheduler.backlog_len() > 0)):
-            self.workers.append(Worker(self, len(self.workers)))
+        self.backend.maybe_spawn_spare()
         self.local_scheduler.on_worker_free()
 
     def exit_blocked(self, spec: Optional[TaskSpec],
@@ -201,7 +223,7 @@ class Node:
     # ------------------------------------------------------------- dataflow
 
     def dispatch(self, spec: TaskSpec) -> None:
-        self.run_queue.put(spec)
+        self.backend.submit(spec)
 
     def prefetch_args(self, spec: TaskSpec) -> None:
         """Eager argument push for cross-node placement: pull the task's
@@ -305,8 +327,8 @@ class Node:
     def shutdown(self) -> None:
         self.stop_heartbeat()
         self.drain_actors()   # closes every actor mailbox
-        for w in self.workers:
-            w.shutdown()
+        self.backend.shutdown()
+        self.store.close()
 
 
 _cluster_epochs = itertools.count(1)
@@ -442,7 +464,12 @@ class Cluster:
                  failure_detection: bool = False,
                  heartbeat_interval_s: float = 0.05,
                  heartbeat_miss: int = 3,
-                 hung_task_timeout_s: Optional[float] = None):
+                 hung_task_timeout_s: Optional[float] = None,
+                 backend: str = "thread"):
+        if backend not in ("thread", "process"):
+            raise ValueError(
+                f"unknown execution backend {backend!r}: expected "
+                f"'thread' or 'process'")
         # monotonic process-wide token: never reused across clusters (an
         # id() would be, after teardown), so per-cluster registration
         # guards compare against this
@@ -474,8 +501,10 @@ class Cluster:
             hung_task_timeout_s, enabled=False)
         self.nodes: List[Node] = []
         res = resources_per_node or {"cpu": float(workers_per_node)}
+        self.backend_name = backend
         self._node_defaults = (workers_per_node, spill_threshold,
-                               transfer_latency_s, store_capacity_bytes)
+                               transfer_latency_s, store_capacity_bytes,
+                               backend)
         for _ in range(num_nodes):
             self.add_node(res)
         if failure_detection:
@@ -487,9 +516,10 @@ class Cluster:
 
     def add_node(self, resources: Optional[Dict[str, float]] = None) -> Node:
         """Elastic scale-up: new nodes join by registering with the GCS."""
-        w, spill, lat, cap = self._node_defaults
+        w, spill, lat, cap, backend = self._node_defaults
         res = dict(resources or {"cpu": float(w)})
-        node = Node(self, len(self.nodes), res, w, spill, lat, cap)
+        node = Node(self, len(self.nodes), res, w, spill, lat, cap,
+                    backend=backend)
         self.nodes.append(node)
         self.detector.watch_node(node)
         self.drain_unschedulable()
@@ -676,6 +706,10 @@ class Cluster:
         dependency — inlining past a pending external would park the
         worker in a blocking fetch (the same rule graph_dispatch
         enforces via the gated submit)."""
+        if not node.backend.supports_inline_chain:
+            # cross-process handoff: the dependent rides the instruction
+            # ring like any other dispatch
+            return False
         inv = self._graph_inv(spec.graph_inv)
         if inv is None or spec.graph_idx < 0:
             return False
@@ -1197,13 +1231,7 @@ class Cluster:
         """Collect the tasks queued on a fail-stopped node (scheduler
         backlog + run queue) for resubmission."""
         requeue = node.local_scheduler.drain()
-        while True:
-            try:
-                spec = node.run_queue.get_nowait()
-            except queue.Empty:
-                break
-            if spec is not None:
-                requeue.append(spec)
+        requeue.extend(node.backend.drain_pending())
         return requeue
 
     def _resubmit_drained(self, specs: List[TaskSpec]) -> None:
@@ -1238,14 +1266,15 @@ class Cluster:
         threads are shut down (they would otherwise linger on the dead
         run queue forever). Mirroring `add_node`, tasks parked for a
         resource this node provides are then replayed."""
-        w, spill, lat, cap = self._node_defaults
+        w, spill, lat, cap, backend = self._node_defaults
         old = self.nodes[node_id]
         old.alive = False  # in-flight tasks on the old node become LOST
         old.store.wipe()   # no-op when kill_node already wiped
         requeue = self._drain_dead_node(old)
         dead_actors = old.drain_actors()  # before shutdown clears them
         old.shutdown()
-        node = Node(self, node_id, dict(old.capacity), w, spill, lat, cap)
+        node = Node(self, node_id, dict(old.capacity), w, spill, lat, cap,
+                    backend=backend)
         self.nodes[node_id] = node  # installed before resubmits target it
         self.detector.watch_node(node)
         self.gcs.log_event("node_restart", f"node{node_id}", "cluster",

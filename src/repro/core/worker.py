@@ -77,6 +77,77 @@ class GetTimeoutError(TimeoutError):
         self.node_id = node_id
 
 
+def finish_success(node: "Node", spec: TaskSpec, where: str) -> tuple:
+    """DONE bookkeeping once a task's results are stored on its return
+    ids: flip the control-plane state, run the GC hook, release
+    compiled-graph dependents. Shared by the in-thread execution path
+    and the process backend's completion-drain threads. Returns the
+    graph dependents whose last dependency edge this completion
+    satisfied."""
+    gcs = node.gcs
+    gcs.set_task_state(spec.task_id, TASK_DONE)
+    # GC hook: unpin args, collect fire-and-forget outputs whose
+    # handles were already dropped (LOST paths keep their pins —
+    # the resubmit still depends on the args)
+    node.cluster.memory.on_task_done(spec)
+    ready: tuple = ()
+    if spec.graph_inv is not None:
+        ready = node.cluster.graph_ready_after(spec)
+    gcs.log_event("finish", spec.task_id, where)
+    return ready
+
+
+def finish_lost(node: "Node", spec: TaskSpec, where: str,
+                error: bool = False) -> None:
+    """A task finished (or failed) on a dead node, or its worker process
+    died under it: the result is discarded, the task is LOST. Push-based
+    loss notification wakes any fetcher blocked on the outputs so it can
+    trigger lineage replay immediately (no polling fallback exists);
+    graph intermediates may have no fetcher, so the loss itself
+    resubmits them."""
+    gcs = node.gcs
+    gcs.set_task_state(spec.task_id, TASK_LOST)
+    if error:
+        gcs.log_event("error", spec.task_id, where, lost=True)
+    for rid in spec.return_ids:
+        gcs.notify_lost(rid)
+    if spec.graph_inv is not None:
+        node.cluster.graph_on_lost(spec)
+
+
+def fail_task(node: "Node", spec: TaskSpec, exc: Exception, where: str,
+              tb: Optional[str] = None) -> tuple:
+    """A task raised on a live node. First offer the exception to the
+    bounded application-level retry machinery (`retry_exceptions`); if
+    the task was resubmitted, store nothing and keep the arg pins.
+    Otherwise store a TaskError (or TaskUnrecoverableError when the
+    retry budget is exhausted) on every return id — error propagation
+    matches eager: dependents run and receive the stored error as their
+    argument value. Returns ``(retried, ready_graph_dependents)``."""
+    gcs = node.gcs
+    cluster = node.cluster
+    if cluster.maybe_retry_exception(spec, exc, where):
+        return True, ()
+    if tb is None:
+        tb = traceback.format_exc()
+    if spec.retry_exceptions and isinstance(exc, spec.retry_exceptions):
+        err: TaskError = TaskUnrecoverableError(
+            f"task {spec.task_id} ({spec.func_name}) exhausted "
+            f"its retry budget:\n" + tb)
+    else:
+        err = TaskError(
+            f"task {spec.task_id} ({spec.func_name}) failed:\n" + tb)
+    for rid in spec.return_ids:
+        node.store.put(rid, err)
+    gcs.set_task_state(spec.task_id, TASK_DONE)
+    cluster.memory.on_task_done(spec)
+    ready: tuple = ()
+    if spec.graph_inv is not None:
+        ready = cluster.graph_ready_after(spec)
+    gcs.log_event("error", spec.task_id, where)
+    return False, ready
+
+
 def execute_task(node: "Node", spec: TaskSpec, who: str) -> None:
     """Run one dispatched task to completion on the calling thread —
     shared by worker threads and the work-stealing get() fast path. The
@@ -104,6 +175,7 @@ def _execute_one(node: "Node", spec: TaskSpec,
     identity afterwards."""
     gcs = node.gcs
     cluster = node.cluster
+    where = f"node{node.node_id}/{who}"
     prev_node = getattr(_worker_ctx, "node", None)
     prev_spec = getattr(_worker_ctx, "spec", None)
     _worker_ctx.node = node
@@ -117,15 +189,14 @@ def _execute_one(node: "Node", spec: TaskSpec,
             # instead of burning a worker on a result nobody can use
             # (graph dependents are dispatched by expire_deadline, never
             # chained — the deadline path is cold)
-            cluster.expire_deadline(spec, f"node{node.node_id}/{who}")
+            cluster.expire_deadline(spec, where)
             return None
         gcs.set_task_state(spec.task_id, TASK_RUNNING)
         # hung-task watchdog bookkeeping: one GIL-atomic dict write here,
         # one pop in the finally — the detector's monitor thread does all
         # the scanning
         node.inflight[spec.task_id] = time.perf_counter()
-        gcs.log_event("start", spec.task_id,
-                      f"node{node.node_id}/{who}")
+        gcs.log_event("start", spec.task_id, where)
         fn = gcs.function(spec.func_name)
         args = [node.resolve(a) for a in spec.args]
         kwargs = {k: node.resolve(v) for k, v in spec.kwargs.items()}
@@ -134,64 +205,22 @@ def _execute_one(node: "Node", spec: TaskSpec,
             rets = (out,) if len(spec.return_ids) == 1 else tuple(out)
             for rid, val in zip(spec.return_ids, rets):
                 node.store.put(rid, val)
-            gcs.set_task_state(spec.task_id, TASK_DONE)
-            # GC hook: unpin args, collect fire-and-forget outputs whose
-            # handles were already dropped (LOST paths keep their pins —
-            # the resubmit still depends on the args)
-            cluster.memory.on_task_done(spec)
-            if spec.graph_inv is not None:
-                ready = cluster.graph_ready_after(spec)
-            gcs.log_event("finish", spec.task_id,
-                          f"node{node.node_id}/{who}")
+            ready = finish_success(node, spec, where)
         else:
-            gcs.set_task_state(spec.task_id, TASK_LOST)
-            # push-based loss notification: wake any fetcher blocked on
-            # these outputs so it can trigger lineage replay immediately
-            # (no polling fallback exists)
-            for rid in spec.return_ids:
-                gcs.notify_lost(rid)
-            if spec.graph_inv is not None:
-                # graph intermediates may have no fetcher to trigger the
-                # replay — the loss itself must resubmit
-                cluster.graph_on_lost(spec)
+            finish_lost(node, spec, where)
     except Exception as exc:  # noqa: BLE001
         if node.alive:  # mirror the success path's liveness check
-            if cluster.maybe_retry_exception(spec, exc,
-                                             f"node{node.node_id}/{who}"):
+            retried, ready = fail_task(node, spec, exc, where)
+            if retried:
                 # bounded application-level retry (`retry_exceptions`):
                 # the task went back to PENDING and was resubmitted
                 # (after backoff) — store nothing, keep the arg pins
                 return None
-            if (spec.retry_exceptions
-                    and isinstance(exc, spec.retry_exceptions)):
-                err: TaskError = TaskUnrecoverableError(
-                    f"task {spec.task_id} ({spec.func_name}) exhausted "
-                    f"its retry budget:\n" + traceback.format_exc())
-            else:
-                err = TaskError(
-                    f"task {spec.task_id} ({spec.func_name}) failed:\n"
-                    + traceback.format_exc())
-            for rid in spec.return_ids:
-                node.store.put(rid, err)
-            gcs.set_task_state(spec.task_id, TASK_DONE)
-            cluster.memory.on_task_done(spec)
-            if spec.graph_inv is not None:
-                # error propagation matches eager: dependents run and
-                # receive the stored TaskError as their argument value
-                ready = cluster.graph_ready_after(spec)
-            gcs.log_event("error", spec.task_id,
-                          f"node{node.node_id}/{who}")
         else:
             # a killed node's failing task is LOST, not DONE: discard the
             # error, wake blocked fetchers so lineage replay reruns the
             # task on a live node
-            gcs.set_task_state(spec.task_id, TASK_LOST)
-            gcs.log_event("error", spec.task_id,
-                          f"node{node.node_id}/{who}", lost=True)
-            for rid in spec.return_ids:
-                gcs.notify_lost(rid)
-            if spec.graph_inv is not None:
-                cluster.graph_on_lost(spec)
+            finish_lost(node, spec, where, error=True)
     finally:
         _worker_ctx.node = prev_node
         _worker_ctx.spec = prev_spec

@@ -196,6 +196,7 @@ def test_detector_kills_missed_beat_node_and_replays():
         core.shutdown()
 
 
+@pytest.mark.slow  # rides the 0.2 s watchdog through real replays
 def test_hung_task_watchdog_replays_elsewhere():
     c = core.init(num_nodes=3, workers_per_node=2,
                   hung_task_timeout_s=0.2)

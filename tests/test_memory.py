@@ -201,7 +201,9 @@ def test_evicted_then_refetched_reconstructs_via_lineage():
         # no lineage) until `keep` — referenced but reconstructible — is
         # the eviction candidate and gets dropped
         fillers = []
-        for i in range(7):   # ~28 KB protected + 4 KB keep > 32 KB cap
+        for i in range(8):   # 32 KB protected + 4 KB keep > 32 KB cap
+                             # (accounting is exact now: 8x4096 fills
+                             # the capacity to the byte)
             h = core.ObjectRef(f"fill{i}")
             c.memory.adopt(h)
             fillers.append(h)
@@ -359,6 +361,7 @@ def test_simcosts_calibrate_evict_from_churn(tmp_path):
 # ------------------------------------------------------------- stress (AC)
 
 
+@pytest.mark.slow  # 10k-task stress loop
 def test_bounded_store_stress_10k_tasks():
     """Acceptance: per-node capacity a small fraction of total output
     bytes; 10k tasks complete correctly, resident bytes never exceed
@@ -394,3 +397,29 @@ def test_bounded_store_stress_10k_tasks():
         assert s["bytes_freed"] > 0
     finally:
         core.shutdown()
+
+
+def test_pin_accounting_matches_store_accounting():
+    """Regression (PR 7): pin accounting (`sizeof`) and store
+    accounting (`bytes_of`) must agree to the byte with the stored
+    buffer length for array-likes — the old heuristic overheads made
+    capacity math drift from real segment usage."""
+    import numpy as np
+    from repro.core.control_plane import ControlPlane
+    from repro.core.memory import sizeof
+    from repro.core.object_store import ObjectStore, SharedMemoryStore
+    arr = np.arange(64 * 64, dtype=np.float32).reshape(64, 64)
+    blob = b"x" * 100_000
+    for cls in (ObjectStore, SharedMemoryStore):
+        store = cls(0, ControlPlane(1))
+        try:
+            store.put("a", arr)
+            store.put("b", blob)
+            assert store.bytes_of("a") == arr.nbytes == sizeof(arr)
+            assert store.bytes_of("b") == len(blob) == sizeof(blob)
+            # the shared-memory store's large buffers are segment-backed,
+            # and the payload buffer length equals the accounted bytes
+            payload = store.payload_of("a")
+            assert len(payload.ensure_buffer()) == arr.nbytes
+        finally:
+            store.close()

@@ -188,6 +188,7 @@ def test_mamba_chunked_matches_decode():
                                rtol=5e-4, atol=5e-4)
 
 
+@pytest.mark.slow  # ~90 s: full-vocab logits materialization
 def test_chunked_loss_matches_full():
     """Vocab-chunked loss (never materializes (B,S,V) logits) must match
     the full-logits loss in value and gradients."""

@@ -1,0 +1,116 @@
+"""Spawn safety: everything the process backend ships across a process
+boundary must pickle — TaskSpecs, @remote task payloads, actor
+constructor arguments — and everything that can't must fail with an
+actionable error naming the offending object, not a bare PicklingError
+three frames deep in multiprocessing.
+"""
+import pickle
+
+import numpy as np
+import pytest
+
+import repro.core as rc
+from repro.core.backends import dump_function
+from repro.core.control_plane import TaskSpec
+from repro.core.serialization import Payload, SpawnSafetyError
+
+
+@rc.remote
+def module_level_task(a, b=1):
+    return a + b
+
+
+@rc.remote
+class ModuleLevelActor:
+    def __init__(self, base, scale=2.0):
+        self.base = base
+        self.scale = scale
+
+    def value(self):
+        return self.base * self.scale
+
+
+def test_taskspec_pickle_roundtrip():
+    spec = TaskSpec(task_id="t1", func_name="module_level_task",
+                    args=(1, np.float32(2.0)), kwargs={"b": 3},
+                    return_ids=("o1",), resources={"cpu": 1.0},
+                    submitter_node=0, max_retries=2,
+                    retry_exceptions=(ValueError,), deadline_s=1.5)
+    out = pickle.loads(pickle.dumps(spec, protocol=5))
+    assert out.task_id == spec.task_id
+    assert out.func_name == spec.func_name
+    assert out.kwargs == {"b": 3}
+    assert out.retry_exceptions == (ValueError,)
+    assert out.deadline_s == 1.5
+
+
+def test_remote_function_ships_by_name():
+    """@remote rebinds the module attribute to the wrapper, which
+    breaks pickle's identity check for the raw function — dump_function
+    must still produce something the child can load and call."""
+    blob = dump_function(module_level_task._fn)
+    fn = pickle.loads(blob)
+    if hasattr(fn, "load"):
+        fn = fn.load()
+    assert fn(2, b=3) == 5
+
+
+def test_actor_ctor_payload_roundtrips():
+    """Actor constructor args follow the same pickle rules as task
+    args (the process backend resolves them parent-side, but the spawn
+    contract — plain data or refs — must hold)."""
+    args = (41,)
+    kwargs = {"scale": 0.5}
+    a2, k2 = pickle.loads(pickle.dumps((args, kwargs), protocol=5))
+    inst_cls = ModuleLevelActor._cls
+    assert inst_cls(*a2, **k2).value() == 20.5
+
+
+def test_closure_error_names_the_function():
+    def local_closure():  # noqa: D401 - deliberately un-importable
+        return 1
+
+    with pytest.raises(SpawnSafetyError) as ei:
+        dump_function(local_closure)
+    msg = str(ei.value)
+    assert "local_closure" in msg          # names the offender
+    assert "module level" in msg           # says how to fix it
+
+
+def test_unpicklable_value_error_names_the_object():
+    payload = Payload.wrap(lambda: 0)     # lambdas never pickle
+    with pytest.raises(SpawnSafetyError) as ei:
+        payload.ensure_buffer(strict=True)
+    assert "<lambda>" in str(ei.value)
+    assert "process boundary" in str(ei.value)
+
+
+def test_unpicklable_is_fine_in_thread_backend():
+    """The same by-reference value is legal when it never leaves the
+    process: the thread store holds it RAW."""
+    payload = Payload.wrap(lambda: 7)
+    assert payload.ensure_buffer(strict=False) is None  # downgraded
+    assert payload.value()() == 7                       # still callable
+
+
+def test_example_workloads_spawn_safe():
+    """The shipped examples' remote functions must be shippable to a
+    worker process (module-level, importable)."""
+    import importlib.util
+    import pathlib
+    import sys
+    path = (pathlib.Path(__file__).resolve().parent.parent
+            / "examples" / "rl_pipeline.py")
+    spec = importlib.util.spec_from_file_location("rl_pipeline", path)
+    rl_pipeline = importlib.util.module_from_spec(spec)
+    sys.modules["rl_pipeline"] = rl_pipeline   # lets _ByName.load resolve
+    try:
+        spec.loader.exec_module(rl_pipeline)
+        for fn in (rl_pipeline.simulate,):
+            raw = getattr(fn, "_fn", fn)
+            loaded = pickle.loads(dump_function(raw))
+            if hasattr(loaded, "load"):
+                loaded = loaded.load()
+            assert callable(loaded) and not hasattr(loaded, "submit")
+    finally:
+        sys.modules.pop("rl_pipeline", None)
