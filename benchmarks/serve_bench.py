@@ -1,0 +1,362 @@
+"""Open-loop SLO benchmark for the serving front door (BENCH_serve.json).
+
+Unlike microbench.py (closed-loop p50s over drained batches), this
+drives the `FrontDoor` with *open-loop* seeded arrival traces — requests
+land on their own clock whether or not the system keeps up — and scores
+**goodput**: requests completed within their deadline, per second.
+Three scenarios:
+
+  adaptive_vs_fixed  same seeded burst trace A/B'd across fixed batch
+                     sizes {1,2,4,8,16} and the AIMD controller; the
+                     adaptive arm must beat the best fixed arm (the
+                     optimum shifts with load and sits between the grid
+                     points, so a probe-driven controller wins).
+  autoscale_step     a 3x arrival-rate step: queue pressure must spawn
+                     replicas through the step and pressure-staleness
+                     must reclaim them after it, while goodput holds.
+  replica_kill       a Poisson run with one injected replica-node kill:
+                     every in-flight request must resolve to a value or
+                     a typed error (no hung futures), with a hot spare
+                     covering the replay window.
+
+The engine is a deterministic sleep-based stand-in (service time affine
+in wave size — base + per_req * n — plus an optional quadratic penalty
+past a knee, modelling the KV-cache/bandwidth cliff real engines hit at
+large batch), so batching dynamics are controlled and the benchmark
+measures the *front door*, not jax. Results land in
+BENCH_serve.json under ``--run-name`` (omitted = measure only). CI runs
+``--smoke --seed 42`` (replica_kill only) and fails on zero goodput, any
+request dispatched past its deadline, an unresolved ticket, an
+unbalanced disposition ledger, or leaked threads.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import threading
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import core                                    # noqa: E402
+from repro.serving import load as serving_load            # noqa: E402
+from repro.serving.engine import Response                 # noqa: E402
+from repro.serving.frontdoor import (AdmissionError,      # noqa: E402
+                                     FixedBatchController, FrontDoor)
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_serve.json")
+
+#: runtime + front-door thread prefixes that must not outlive teardown
+THREAD_PREFIXES = ("worker-", "actor-", "heartbeat-", "failure-detector",
+                   "mm-reclaimer", "frontdoor")
+
+FIXED_SIZES = (1, 2, 4, 8, 16)
+
+
+class BenchEngine:
+    """Deterministic stand-in engine:
+    service = base + per_req * n + cliff * max(0, n - knee)^2.
+    With cliff > 0, per-request cost has an interior minimum near the
+    knee — the regime where batch-size choice actually matters."""
+
+    def __init__(self, base_s: float, per_req_s: float,
+                 knee: int = 0, cliff_s: float = 0.0):
+        self.base_s = base_s
+        self.per_req_s = per_req_s
+        self.knee = knee
+        self.cliff_s = cliff_s
+
+    def serve(self, requests, max_wave=8):
+        n = len(requests)
+        time.sleep(self.base_s + self.per_req_s * n
+                   + self.cliff_s * max(0, n - self.knee) ** 2)
+        now = time.perf_counter()
+        return [Response(r.request_id, [1] * r.max_new_tokens,
+                         now - r.created) for r in requests]
+
+
+def drive(fd: FrontDoor, trace_requests, deadline_s: float,
+          mid_run=None) -> dict:
+    """Replay a materialized trace open-loop, resolve every ticket, and
+    return the disposition ledger + goodput. `mid_run(i)` fires once per
+    submission index (the kill scenario's injection hook)."""
+    tickets = []
+
+    def submit(req):
+        i = len(tickets)
+        if mid_run is not None:
+            mid_run(i)
+        try:
+            tickets.append(fd.submit_request(req, deadline_s=deadline_s))
+        except AdmissionError:
+            tickets.append(None)           # counted by the SLO tracker
+
+    serving_load.replay(trace_requests, submit)
+    values = typed_errors = unresolved = 0
+    for t in tickets:
+        if t is None:
+            continue
+        try:
+            t.result(timeout=60.0)
+            values += 1
+        except (core.TaskError, TimeoutError, RuntimeError):
+            # DeadlineShedError / AdmissionError are RuntimeErrors;
+            # TimeoutError covers close-abandonment — all typed
+            if t.done():
+                typed_errors += 1
+            else:
+                unresolved += 1
+    snap = fd.stats()
+    snap["overall_goodput_rps"] = fd.slo.overall_goodput()
+    snap["values"] = values
+    snap["typed_errors"] = typed_errors
+    snap["unresolved"] = unresolved
+    snap["offered"] = len(trace_requests)
+    snap["ledger_balanced"] = (
+        snap["admitted"] == snap["completed_ok"] + snap["completed_late"]
+        + snap["shed"] + snap["failed"])
+    return snap
+
+
+# ------------------------------------------------ scenario: A/B batching
+
+def adaptive_vs_fixed(seed: int, smoke: bool) -> dict:
+    """Same seeded burst trace, one replica, no autoscaling — only the
+    batch-size policy differs per arm. The engine's latency cliff (knee
+    5, quadratic beyond) puts the goodput-optimal wave size between the
+    fixed grid points {4, 8}, so the probe-driven AIMD controller finds
+    a batch no fixed power-of-two arm can sit at."""
+    dur = 4.0 if smoke else 9.0
+    b0, b1 = (1.5, 2.8) if smoke else (3.0, 6.0)
+    trace = serving_load.burst_trace(80.0, 450.0, dur, b0, b1, seed=seed)
+    deadline_s = 0.040
+    arms = {}
+    for name, factory in (
+            [(f"fixed_{b}", (lambda b=b: FixedBatchController(b)))
+             for b in FIXED_SIZES]
+            + [("adaptive", None)]):
+        cluster = core.init(num_nodes=2, workers_per_node=2)
+        fd = FrontDoor(lambda: BenchEngine(0.006, 0.0015,
+                                           knee=5, cliff_s=0.002),
+                       num_replicas=1, min_replicas=1, max_replicas=1,
+                       max_queue=600, default_deadline_s=deadline_s,
+                       target_wave_s=0.015, max_batch=16,
+                       resources={"cpu": 0.25},
+                       controller_factory=factory)
+        reqs = serving_load.materialize(trace, seed=seed)
+        arms[name] = drive(fd, reqs, deadline_s)
+        fd.close()
+        core.shutdown()
+    best_fixed = max((arms[f"fixed_{b}"]["overall_goodput_rps"]
+                      for b in FIXED_SIZES))
+    return {
+        "trace": {"shape": "burst", "base_hz": 80, "burst_hz": 450,
+                  "duration_s": dur, "deadline_ms": deadline_s * 1e3,
+                  "seed": seed},
+        "arms": arms,
+        "best_fixed_goodput_rps": best_fixed,
+        "adaptive_goodput_rps": arms["adaptive"]["overall_goodput_rps"],
+        "adaptive_beats_best_fixed": (
+            arms["adaptive"]["overall_goodput_rps"] > best_fixed),
+    }
+
+
+# ---------------------------------------------- scenario: autoscale step
+
+def autoscale_step(seed: int, smoke: bool) -> dict:
+    """3x arrival-rate step: base -> 3x base -> base. Queue pressure must
+    scale replicas up through the step; pressure staleness must reclaim
+    them during the post-burst tail while traffic still flows."""
+    if smoke:
+        seg, dur = 1.5, 5.5
+    else:
+        seg, dur = 3.0, 11.0
+    trace = serving_load.burst_trace(100.0, 300.0, dur, seg, 2 * seg,
+                                     seed=seed)
+    deadline_s = 0.15
+    cluster = core.init(num_nodes=2, workers_per_node=2)
+    fd = FrontDoor(lambda: BenchEngine(0.020, 0.002),
+                   num_replicas=1, min_replicas=1, max_replicas=3,
+                   max_queue=600, default_deadline_s=deadline_s,
+                   target_wave_s=0.05, max_batch=8,
+                   scale_up_queue_depth=8, scale_up_cooldown_s=0.4,
+                   scale_down_idle_s=1.0, resources={"cpu": 0.25})
+    timeline = []
+    stop = threading.Event()
+
+    def sampler():
+        t0 = time.perf_counter()
+        while not stop.is_set():
+            timeline.append((round(time.perf_counter() - t0, 2),
+                             fd.replica_count()))
+            stop.wait(0.25)
+    sampler_t = threading.Thread(target=sampler, name="bench-sampler",
+                                 daemon=True)
+    sampler_t.start()
+    reqs = serving_load.materialize(trace, seed=seed)
+    result = drive(fd, reqs, deadline_s)
+    # post-burst: wait for pressure-staleness scale-down to reclaim
+    reclaim_deadline = time.perf_counter() + 15.0
+    while (fd.replica_count() > 1
+           and time.perf_counter() < reclaim_deadline):
+        time.sleep(0.1)
+    stop.set()
+    sampler_t.join(2.0)
+    result["replica_timeline"] = timeline
+    result["max_replicas_seen"] = max(n for _, n in timeline)
+    result["final_replicas"] = fd.replica_count()
+    result["goodput_fraction"] = (result["completed_ok"]
+                                  / max(result["admitted"], 1))
+    fd.close()
+    core.shutdown()
+    return result
+
+
+# ----------------------------------------------- scenario: replica kill
+
+def replica_kill(seed: int, smoke: bool) -> dict:
+    """Poisson run with one injected replica-node kill mid-trace: every
+    request must resolve (value or typed error), and the death listener
+    must spawn a hot spare while the lost replica replays."""
+    dur = 2.5 if smoke else 4.0
+    trace = serving_load.poisson_trace(150.0, dur, seed=seed)
+    deadline_s = 0.1
+    cluster = core.init(num_nodes=3, workers_per_node=2,
+                        failure_detection=True)
+    fd = FrontDoor(lambda: BenchEngine(0.008, 0.0015),
+                   num_replicas=2, min_replicas=1, max_replicas=4,
+                   max_queue=600, default_deadline_s=deadline_s,
+                   target_wave_s=0.03, max_batch=16,
+                   scale_down_idle_s=30.0, resources={"cpu": 0.25})
+    kill_at = len(trace) // 2
+    state = {"killed": None}
+
+    def inject(i):
+        if i == kill_at and state["killed"] is None:
+            nid = cluster.gcs.actor_node(
+                fd._replicas[0].handle.actor_id)
+            if nid is not None:
+                cluster.kill_node(nid)
+                state["killed"] = nid
+    reqs = serving_load.materialize(trace, seed=seed)
+    result = drive(fd, reqs, deadline_s, mid_run=inject)
+    result["killed_node"] = state["killed"]
+    result["replicas_after"] = fd.replica_count()
+    from repro.core.profiler import summarize
+    s = summarize(cluster.gcs)
+    result["serve_spares"] = s["serve_spares"]
+    result["node_failures"] = s["node_failures"]
+    fd.close()
+    core.shutdown()
+    return result
+
+
+# -------------------------------------------------------------- gating
+
+def gate(results: dict, smoke: bool) -> list:
+    """Return the list of failed checks (empty = green)."""
+    failures = []
+
+    def check(cond, msg):
+        if not cond:
+            failures.append(msg)
+
+    for name, r in results.items():
+        scen = r if name != "adaptive_vs_fixed" else r["arms"]["adaptive"]
+        check(scen["overall_goodput_rps"] > 0,
+              f"{name}: zero goodput")
+        check(scen["dispatched_past_deadline"] == 0,
+              f"{name}: {scen['dispatched_past_deadline']} request(s) "
+              f"dispatched past deadline (EDF shed failed)")
+        check(scen["unresolved"] == 0,
+              f"{name}: {scen['unresolved']} hung future(s)")
+        check(scen["ledger_balanced"],
+              f"{name}: disposition ledger does not balance")
+    if "replica_kill" in results:
+        rk = results["replica_kill"]
+        check(rk["killed_node"] is not None, "replica_kill: no node killed")
+        check(rk["serve_spares"] >= 1,
+              "replica_kill: death listener spawned no hot spare")
+    if not smoke:
+        if "adaptive_vs_fixed" in results:
+            ab = results["adaptive_vs_fixed"]
+            check(ab["adaptive_beats_best_fixed"],
+                  f"adaptive goodput {ab['adaptive_goodput_rps']:.1f}/s "
+                  f"not above best fixed "
+                  f"{ab['best_fixed_goodput_rps']:.1f}/s")
+        if "autoscale_step" in results:
+            st = results["autoscale_step"]
+            check(st["max_replicas_seen"] >= 2,
+                  "autoscale_step: never scaled past 1 replica")
+            check(st["final_replicas"] == 1,
+                  f"autoscale_step: scale-down left "
+                  f"{st['final_replicas']} replicas")
+            check(st["goodput_fraction"] >= 0.7,
+                  f"autoscale_step: goodput fraction "
+                  f"{st['goodput_fraction']:.2f} < 0.7 through the step")
+    return failures
+
+
+def leaked_threads() -> list:
+    time.sleep(0.5)
+    return sorted(t.name for t in threading.enumerate()
+                  if t.is_alive() and t.name.startswith(THREAD_PREFIXES))
+
+
+def update_bench_file(results: dict, run_name: str,
+                      path: str = BENCH_PATH) -> None:
+    doc = {"schema": 1,
+           "metric": ("open-loop p99-under-SLO goodput: requests "
+                      "completed within deadline per second, plus the "
+                      "full disposition ledger per scenario"),
+           "runs": {}}
+    if os.path.exists(path):
+        with open(path) as f:
+            doc = json.load(f)
+    doc.setdefault("runs", {})[run_name] = results
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: replica_kill scenario only, "
+                    "hard gates, no BENCH_serve.json write")
+    ap.add_argument("--run-name", default=None,
+                    help="record results under this run in "
+                    "BENCH_serve.json (e.g. pr8)")
+    args = ap.parse_args()
+
+    results = {}
+    if args.smoke:
+        results["replica_kill"] = replica_kill(args.seed, smoke=True)
+    else:
+        results["adaptive_vs_fixed"] = adaptive_vs_fixed(args.seed, False)
+        results["autoscale_step"] = autoscale_step(args.seed, False)
+        results["replica_kill"] = replica_kill(args.seed, False)
+
+    failures = gate(results, smoke=args.smoke)
+    leaks = leaked_threads()
+    if leaks:
+        failures.append(f"leaked threads after teardown: {leaks}")
+
+    print(json.dumps(results, indent=1, default=str))
+    if args.run_name and not args.smoke:
+        update_bench_file(results, args.run_name)
+        print(f"recorded run {args.run_name!r} in {BENCH_PATH}")
+    if failures:
+        print("\nSERVE BENCH FAILURES:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        sys.exit(1)
+    print("\nserve bench: all gates green")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,77 +1,125 @@
-"""Serve a small LM through the actor-backed replica pool: async request
-admission (futures), an N-replica actor serving tier with wait-based
-straggler routing, wave-batched prefill+decode per replica — the paper's
-R1/R2 shape applied to LLM serving, now with stateful serving actors.
+"""Serve a small LM through the open-loop front door: seeded Poisson
+arrivals land on their own clock, admission control bounds the queue,
+expired requests are shed before dispatch (EDF), the AIMD controller
+adapts the wave size to the engine's measured latency, and the
+autoscaler grows/reclaims replica actors under queue pressure — the
+paper's R1/R2 shape applied end-to-end to LLM serving.
 
-Run:  PYTHONPATH=src python examples/serve_llm.py --requests 12
+Requests are submitted with a per-request deadline; the run ends with
+the SLO tracker's disposition ledger (ok/late/shed/rejected), sliding
+latency percentiles, and goodput.
+
+Run:  PYTHONPATH=src python examples/serve_llm.py --rate 20 --duration 3
 """
 import argparse
-import time
 
 import jax
-import numpy as np
 
 from repro import core
 from repro.configs.registry import get_smoke_config
 from repro.models import build_model
-from repro.serving import ReplicaPool, Request, ServingEngine
+from repro.serving import FrontDoor, ServingEngine
+from repro.serving import load as serving_load
+from repro.serving.frontdoor import AdmissionError, DeadlineShedError
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm-1.6b")
-    ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="mean open-loop arrival rate (req/s)")
+    ap.add_argument("--duration", type=float, default=3.0)
+    ap.add_argument("--deadline-ms", type=float, default=2000.0)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch).scaled(param_dtype="float32")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    max_seq = args.prompt_len + args.max_new + 4
+    max_seq = max(serving_load.LENGTH_BUCKETS) + args.max_new + 4
 
-    cluster = core.init(num_nodes=2, workers_per_node=2)
+    core.init(num_nodes=2, workers_per_node=2)
 
     # each replica actor builds its own engine on its node (model state
-    # never round-trips through the object store)
-    pool = ReplicaPool(lambda: ServingEngine(model, params, max_seq=max_seq),
-                       num_replicas=args.replicas)
+    # never round-trips through the object store); the front door owns
+    # admission, deadline shedding, batching, and autoscaling above them
+    max_batch = 2
 
-    @core.remote
-    def make_request(i):
-        rng = np.random.default_rng(i)
-        return Request(i, rng.integers(1, cfg.vocab_size - 1,
-                                       size=(args.prompt_len,)).astype(np.int32),
-                       max_new_tokens=args.max_new)
+    def warm_engine():
+        # runs inside each replica actor's constructor: pre-compile every
+        # (wave width, prompt length) shape the trace can produce, so no
+        # cold jit blows deadlines once the open-loop clock starts
+        import numpy as np
+        from repro.serving import Request
+        eng = ServingEngine(model, params, max_seq=max_seq)
+        for plen in serving_load.LENGTH_BUCKETS:
+            for width in range(1, max_batch + 1):
+                reqs = [Request(0, np.arange(plen, dtype=np.int32) % 7 + 1,
+                                max_new_tokens=2) for _ in range(width)]
+                eng.serve(reqs, max_wave=width)
+        return eng
 
-    # async admission: requests arrive as futures; waves dispatch to the
-    # least-loaded replica as they fill, results stream back via wait()
-    req_refs = [make_request.submit(i) for i in range(args.requests)]
-    wave_refs = []
-    pending = req_refs
-    while pending:
-        done, pending = core.wait(pending, num_returns=min(4, len(pending)),
-                                  timeout=5.0)
-        wave_refs.append(pool.submit_wave(core.get(done)))
-    t0 = time.perf_counter()
-    responses = [r for ref in wave_refs for r in core.get(ref, timeout=120)]
-    wall = time.perf_counter() - t0
+    # fixed fleet: the example demonstrates the open-loop SLO path;
+    # autoscaling under load is exercised by benchmarks/serve_bench.py
+    fd = FrontDoor(
+        warm_engine,
+        num_replicas=args.replicas, min_replicas=args.replicas,
+        max_replicas=args.replicas,
+        default_deadline_s=args.deadline_ms / 1e3,
+        target_wave_s=0.5 * args.deadline_ms / 1e3,
+        max_batch=max_batch, resources={"cpu": 0.25})
 
-    responses.sort(key=lambda r: r.request_id)
-    n_tok = sum(len(r.tokens) for r in responses)
-    print(f"served {len(responses)} requests, {n_tok} tokens "
-          f"on {args.replicas} replica actors")
-    lat = sorted(r.latency_s for r in responses)
-    print(f"latency p50={lat[len(lat)//2]*1e3:.1f}ms "
-          f"p99={lat[-1]*1e3:.1f}ms")
-    for i, st in enumerate(pool.stats()):
-        print(f"  replica {i}: {st['waves_served']} waves, "
-              f"{st['requests_served']} requests")
-    for r in responses[:3]:
-        print(f"  req {r.request_id}: {r.tokens}")
+    # readiness probes: replica constructors (and their jit warmup) run
+    # asynchronously — don't start the arrival clock until every replica
+    # has served a round
+    probe_trace = [(0.0, serving_load.LENGTH_BUCKETS[0], args.max_new)
+                   ] * (2 * args.replicas)
+    probes = serving_load.materialize(probe_trace, seed=args.seed,
+                                      vocab=cfg.vocab_size - 1)
+    for t in [fd.submit_request(r, deadline_s=600.0) for _, r in probes]:
+        t.result(timeout=600)
+
+    trace = serving_load.poisson_trace(args.rate, args.duration,
+                                       seed=args.seed,
+                                       max_new_tokens=args.max_new)
+    reqs = serving_load.materialize(trace, seed=args.seed,
+                                    vocab=cfg.vocab_size - 1)
+    tickets = []
+
+    def submit(req):
+        try:
+            tickets.append(fd.submit_request(req))
+        except AdmissionError:
+            pass                           # counted by the SLO tracker
+
+    # open loop: replay submits on the trace's clock and never waits on
+    # completions — the system keeps up or the ledger shows it didn't
+    offered = serving_load.replay(reqs, submit)
+
+    ok = shed = 0
+    for t in tickets:
+        try:
+            t.result(timeout=120)
+            ok += 1
+        except (DeadlineShedError, core.TaskError, TimeoutError):
+            shed += 1
+    st = fd.stats()
+    print(f"offered {offered} req @ {args.rate:.0f}/s open-loop, "
+          f"deadline {args.deadline_ms:.0f}ms")
+    print(f"  admitted={st['admitted']} rejected={st['rejected']} "
+          f"ok={st['completed_ok']} late={st['completed_late']} "
+          f"shed={st['shed']}")
+    print(f"  latency p50={st['latency_p50_ms']:.1f}ms "
+          f"p99={st['latency_p99_ms']:.1f}ms "
+          f"goodput={fd.slo.overall_goodput():.1f}/s")
+    print(f"  replicas={st['replicas']} batch_limits={st['batch_limits']} "
+          f"dispatched_past_deadline={st['dispatched_past_deadline']}")
+    fd.close()
     core.shutdown()
-    assert len(responses) == args.requests
+    assert ok + shed == len(tickets)
+    assert st["dispatched_past_deadline"] == 0
     return 0
 
 

@@ -139,6 +139,27 @@
       node failure: its in-flight tasks are replayed via lineage, and
       with ``failure_detection=True`` a node whose children all died
       stops heartbeating and is fail-stopped by the monitor.
+  11. Serving — ``repro.serving.FrontDoor`` is the open-loop request
+      tier over actor-backed engine replicas: ``submit_request`` either
+      admits a request (bounded queue; past the bound it raises
+      ``AdmissionError``) and returns a ``ServeTicket`` future, or the
+      EDF deadline queue sheds it before dispatch (the ticket raises
+      ``DeadlineShedError``; an admitted request is *never* dispatched
+      past its deadline). Waves are length-aligned and sized by a
+      Clipper-style AIMD controller probing each replica's measured
+      latency against ``target_wave_s``; queue pressure autoscales
+      replicas between ``min_replicas``/``max_replicas`` on the live
+      cluster (planned scale-down retires actors via
+      ``Cluster.retire_actor`` — released, not failed), and a replica
+      lost to node death is replaced plus covered by a hot spare.
+      ``FrontDoor.stats()``/``repro.serving.slo.SLOTracker`` expose the
+      disposition ledger (admitted = ok + late + shed + failed),
+      sliding latency percentiles, and goodput — requests completed
+      within deadline per second, the serving SLO the open-loop
+      benchmark (benchmarks/serve_bench.py) gates on. Seeded open-loop
+      load shapes live in ``repro.serving.load`` (Poisson / burst /
+      diurnal traces; ``replay`` submits on the trace clock and never
+      waits on completions).
 
 Usage:
     cluster = init(num_nodes=4, workers_per_node=2)

@@ -483,6 +483,15 @@ class ControlPlane:
         callers; the mailbox re-orders on delivery)."""
         return tuple(self.get(f"actor_log:{actor_id}") or ())
 
+    def retire_actor(self, actor_id: str) -> None:
+        """Mark an actor retired (planned scale-down, not failure). The
+        relocation machinery consults this so a later node death never
+        resurrects a retired actor via restart-with-replay."""
+        self.put(f"actor_retired:{actor_id}", True)
+
+    def actor_retired(self, actor_id: str) -> bool:
+        return bool(self.get(f"actor_retired:{actor_id}"))
+
     def set_actor_checkpoint(self, actor_id: str, seq: int,
                              state: Any) -> None:
         """Record a `__getstate__` snapshot covering method seqs < `seq`;

@@ -37,7 +37,14 @@ def summarize(gcs: ControlPlane) -> Dict[str, float]:
     exception retries), ``task_unrecoverable`` / ``task_deadline``
     (tasks sealed by budget exhaustion / deadline expiry),
     ``actor_unrecoverable`` (actors past their restart budget), and
-    ``chaos`` (injected fault events)."""
+    ``chaos`` (injected fault events). Serving counters come from the
+    front door's control loop (repro.serving.frontdoor): ``serve_admit``
+    / ``serve_reject`` (admission control), ``serve_shed`` (deadline
+    shedding), ``serve_wave`` (dispatched waves, with sizes for the mean
+    wave width), ``serve_retry`` (re-enqueues after replica failure),
+    ``serve_scale_up`` / ``serve_scale_down`` / ``serve_spare``
+    (autoscaler decisions), and ``actor_retired`` (planned actor
+    scale-down via Cluster.retire_actor)."""
     raw = gcs.events()
     tl: Dict[str, List] = defaultdict(list)
     evictions = reclaims = reconstructs_after_evict = 0
@@ -47,6 +54,10 @@ def summarize(gcs: ControlPlane) -> Dict[str, float]:
     node_failures = detector_kills = watchdog_kills = 0
     retries = unrecoverable = deadline_expired = 0
     actor_unrecoverable = chaos_events = 0
+    serve_admitted = serve_rejected = serve_shed = serve_retries = 0
+    serve_waves = serve_wave_requests = 0
+    serve_scale_ups = serve_scale_downs = serve_spares = 0
+    actors_retired = 0
     for t, kind, task_id, where, extra in raw:
         tl[task_id].append((t, kind, where, extra))
         if kind == "evict":
@@ -80,6 +91,25 @@ def summarize(gcs: ControlPlane) -> Dict[str, float]:
             actor_unrecoverable += 1
         elif kind == "chaos":
             chaos_events += 1
+        elif kind == "serve_admit":
+            serve_admitted += 1
+        elif kind == "serve_reject":
+            serve_rejected += 1
+        elif kind == "serve_shed":
+            serve_shed += 1
+        elif kind == "serve_retry":
+            serve_retries += 1
+        elif kind == "serve_wave":
+            serve_waves += 1
+            serve_wave_requests += extra.get("size", 0)
+        elif kind == "serve_scale_up":
+            serve_scale_ups += 1
+        elif kind == "serve_scale_down":
+            serve_scale_downs += 1
+        elif kind == "serve_spare":
+            serve_spares += 1
+        elif kind == "actor_retired":
+            actors_retired += 1
     submit_to_start, run_times, spills, locals_ = [], [], 0, 0
     for task_id, events in tl.items():
         events.sort()
@@ -121,6 +151,17 @@ def summarize(gcs: ControlPlane) -> Dict[str, float]:
         "tasks_deadline_expired": deadline_expired,
         "actors_unrecoverable": actor_unrecoverable,
         "chaos_events": chaos_events,
+        "serve_admitted": serve_admitted,
+        "serve_rejected": serve_rejected,
+        "serve_shed": serve_shed,
+        "serve_retries": serve_retries,
+        "serve_waves": serve_waves,
+        "serve_wave_size_mean": (serve_wave_requests
+                                 / max(serve_waves, 1)),
+        "serve_scale_ups": serve_scale_ups,
+        "serve_scale_downs": serve_scale_downs,
+        "serve_spares": serve_spares,
+        "actors_retired": actors_retired,
     }
 
 

@@ -14,7 +14,7 @@ import itertools
 import queue
 import threading
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.control_plane import (TASK_DONE, TASK_LOST, TASK_PENDING,
                                       TASK_RUNNING, ActorSpec, ControlPlane,
@@ -500,6 +500,12 @@ class Cluster:
             self, heartbeat_interval_s, heartbeat_miss,
             hung_task_timeout_s, enabled=False)
         self.nodes: List[Node] = []
+        # node-death listeners: callbacks fired (with the node id) at the
+        # end of kill_node, after the node's objects are wiped, tasks
+        # requeued, and actors handed to relocation. Control loops above
+        # the runtime (the serving front door's hot-spare autoscaler)
+        # subscribe here instead of polling liveness.
+        self._death_listeners: List[Callable[[int], None]] = []
         res = resources_per_node or {"cpu": float(workers_per_node)}
         self.backend_name = backend
         self._node_defaults = (workers_per_node, spill_threshold,
@@ -611,6 +617,11 @@ class Cluster:
             self._relocate_actor(old_ctx.aspec, from_node_id)
 
     def _relocate_actor(self, aspec: ActorSpec, from_node_id: int) -> None:
+        # a retired actor (planned scale-down) is never resurrected: its
+        # retirement was deliberate, so replay would silently undo an
+        # autoscaler decision and leak a standing reservation
+        if self.gcs.actor_retired(aspec.actor_id):
+            return
         # actor replay rides the same bounded-retry policy as task
         # lineage: an actor whose node keeps dying is re-placed and
         # replayed at most default_max_retries times, then abandoned
@@ -673,6 +684,60 @@ class Cluster:
                 self._unschedulable_actors, [])
         for aspec, from_nid in parked:
             self._relocate_actor(aspec, from_nid)
+
+    def retire_actor(self, actor_id: str) -> None:
+        """Planned actor scale-down (the serving front door's autoscaler
+        rides this): mark the actor retired in the control plane, drop it
+        from its node's actor map, and close its mailbox — the context
+        thread exits and releases the actor's standing reservation.
+        Unlike kill_node's drain, retirement is permanent: relocation
+        skips retired actors, so a later failure of the same node never
+        resurrects one via restart-with-replay. Callers are expected to
+        have drained their in-flight calls first (pending mailbox work is
+        discarded, exactly like a node death — but nothing will replay
+        it)."""
+        self.gcs.retire_actor(actor_id)
+        nid = self.gcs.actor_node(actor_id)
+        self.gcs.log_event("actor_retired", actor_id,
+                           f"node{nid}" if nid is not None else "parked")
+        # also purge a parked incarnation waiting for capacity
+        with self._unsched_lock:
+            self._unschedulable_actors = [
+                (a, f) for a, f in self._unschedulable_actors
+                if a.actor_id != actor_id]
+        if nid is None or nid >= len(self.nodes):
+            return
+        node = self.nodes[nid]
+        with node._actors_lock:
+            ctx = node._actors.pop(actor_id, None)
+        if ctx is not None:
+            ctx.mailbox.close()
+        # the released standing grant is capacity: parked work may now fit
+        self.drain_unschedulable()
+        self._retry_parked_actors()
+
+    # ------------------------------------------------------ death listeners
+
+    def add_death_listener(self, cb: Callable[[int], None]) -> None:
+        """Subscribe to node fail-stops: `cb(node_id)` fires at the end of
+        every effective kill_node (post drain/relocation), on the killing
+        thread — detector, chaos harness, or driver. Callbacks must be
+        quick and non-blocking; exceptions are swallowed so one listener
+        cannot break failure handling."""
+        self._death_listeners.append(cb)
+
+    def remove_death_listener(self, cb: Callable[[int], None]) -> None:
+        try:
+            self._death_listeners.remove(cb)
+        except ValueError:
+            pass
+
+    def _notify_death(self, node_id: int) -> None:
+        for cb in list(self._death_listeners):
+            try:
+                cb(node_id)
+            except Exception:
+                pass
 
     # ------------------------------------------------------ compiled graphs
 
@@ -1256,6 +1321,7 @@ class Cluster:
         self._restart_actors(node.drain_actors(), node_id)
         self.gcs.log_event("node_drained", f"node{node_id}", "cluster",
                            lost_objects=lost, requeued=len(requeue))
+        self._notify_death(node_id)
 
     def restart_node(self, node_id: int) -> None:
         """Stateless component restart (R6): fresh node under the same
@@ -1268,6 +1334,7 @@ class Cluster:
         resource this node provides are then replayed."""
         w, spill, lat, cap, backend = self._node_defaults
         old = self.nodes[node_id]
+        was_alive = old.alive
         old.alive = False  # in-flight tasks on the old node become LOST
         old.store.wipe()   # no-op when kill_node already wiped
         requeue = self._drain_dead_node(old)
@@ -1285,6 +1352,10 @@ class Cluster:
         self._restart_actors(dead_actors, node_id)
         self._retry_parked_actors()
         self.drain_unschedulable()
+        if was_alive:
+            # a restart of a live node is a fail-stop the listeners did
+            # not already see via kill_node
+            self._notify_death(node_id)
 
     def shutdown(self) -> None:
         self.detector.shutdown()

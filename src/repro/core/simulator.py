@@ -599,3 +599,138 @@ def chaos_rolling_restart(num_nodes: int = 100, num_tasks: int = 2000,
             "restarts": num_nodes,
             "max_attempts": max(attempts) if attempts else 0,
             "throughput": sim.throughput()}
+
+
+# ---------------------------------------------------------- serving DES
+
+def serving_diurnal(num_nodes: int = 100, mean_rate_hz: float = 2000.0,
+                    amplitude: float = 0.8, period_s: float = 20.0,
+                    duration_s: float = 40.0, seed: int = 0,
+                    costs: SimCosts = SimCosts(),
+                    deadline_s: float = 0.040,
+                    base_s: float = 0.006, per_req_s: float = 0.0015,
+                    knee: int = 5, cliff_s: float = 0.002,
+                    target_wave_s: float = 0.015, max_batch: int = 16,
+                    min_replicas: int = 2, max_queue: int = 4096,
+                    scale_up_queue_depth: int = 32,
+                    scale_up_cooldown_s: float = 0.25,
+                    scale_down_idle_s: float = 2.0,
+                    replica_spawn_s: float = 0.05) -> Dict:
+    """Diurnal arrival wave against the front door's policies in virtual
+    time: a sinusoidally modulated Poisson stream (the load harness's
+    ``diurnal_trace``) over a cluster of up to ``num_nodes`` one-replica
+    nodes, with the real ``BatchController`` driving per-replica AIMD
+    wave sizing and the same admission / EDF-shed / queue-pressure
+    autoscale rules the runtime front door applies — but with no
+    wall-clock, so a 100-node day-cycle runs in milliseconds. Service
+    time is the serve bench's calibrated engine curve
+    (base + per_req * n + cliff * max(0, n - knee)^2); per-wave dispatch
+    is charged the measured actor-call + graph-dispatch costs. Validates
+    that replica count tracks the arrival wave (scale-up near the crest,
+    reclaim in the trough) and that goodput holds through the cycle."""
+    from repro.serving.frontdoor import BatchController
+    from repro.serving.load import diurnal_trace
+
+    arrivals = diurnal_trace(mean_rate_hz, amplitude, period_s,
+                             duration_s, seed=seed)
+    dispatch_cost = costs.actor_call_s + costs.graph_dispatch_s
+
+    queue: List[Tuple[float, int]] = []      # (deadline, seq) EDF heap
+    replicas: List[Dict] = [
+        {"free_at": 0.0,
+         "ctl": BatchController(target_wave_s, max_batch=max_batch)}
+        for _ in range(min_replicas)]
+    admitted = rejected = shed = ok = late = 0
+    inflight = 0
+    last_scale_t = -1e9
+    last_pressure_t = 0.0
+    max_replicas_seen = min_replicas
+    wave_sizes: List[int] = []
+    timeline: List[Tuple[float, int]] = []
+
+    # event heap: (t, kind, payload); kinds: 0=arrival, 1=wave done,
+    # 2=autoscaler tick (time-uniform pressure sampling, like the
+    # runtime control loop — sampling at arrival events alone is biased
+    # toward queue-occupied instants and starves scale-down)
+    events: List[Tuple[float, int, int, tuple]] = []
+    for seq, (t, _plen, _budget) in enumerate(arrivals):
+        heapq.heappush(events, (t, 0, seq, ()))
+    seq_gen = len(arrivals)
+    tick = scale_down_idle_s / 4.0
+    n_ticks = int((duration_s + 2 * scale_down_idle_s) / tick)
+    for k in range(1, n_ticks + 1):
+        heapq.heappush(events, (k * tick, 2, seq_gen, ()))
+        seq_gen += 1
+
+    def service_s(n: int) -> float:
+        return (base_s + per_req_s * n
+                + cliff_s * max(0, n - knee) ** 2)
+
+    while events:
+        t, kind, seq, payload = heapq.heappop(events)
+        if kind == 0:                                   # arrival
+            if len(queue) + inflight >= max_queue:
+                rejected += 1
+            else:
+                admitted += 1
+                heapq.heappush(queue, (t + deadline_s, seq))
+        elif kind == 2:                                 # autoscaler tick
+            if queue:
+                last_pressure_t = t
+        else:                                           # wave completion
+            ridx, size, n_late = payload
+            r = replicas[ridx] if ridx < len(replicas) else None
+            inflight -= size
+            ok += size - n_late
+            late += n_late
+            if r is not None:
+                r["ctl"].observe(service_s(size), wave_size=size)
+        # shed expired heads (never dispatched late)
+        while queue and queue[0][0] <= t:
+            heapq.heappop(queue)
+            shed += 1
+        # dispatch to every free replica
+        for ridx, r in enumerate(replicas):
+            if r["free_at"] > t or not queue:
+                continue
+            size = min(len(queue), r["ctl"].size)
+            deadlines = [heapq.heappop(queue)[0] for _ in range(size)]
+            done_at = t + dispatch_cost + service_s(size)
+            n_late = sum(1 for d in deadlines if done_at > d)
+            r["free_at"] = done_at
+            inflight += size
+            wave_sizes.append(size)
+            heapq.heappush(events, (done_at, 1, seq_gen,
+                                    (ridx, size, n_late)))
+            seq_gen += 1
+        # autoscale on queue pressure / staleness, one step per event
+        if (len(queue) > scale_up_queue_depth
+                and len(replicas) < num_nodes
+                and t - last_scale_t >= scale_up_cooldown_s):
+            replicas.append(
+                {"free_at": t + replica_spawn_s,
+                 "ctl": BatchController(target_wave_s,
+                                        max_batch=max_batch)})
+            last_scale_t = t
+            max_replicas_seen = max(max_replicas_seen, len(replicas))
+        elif (len(replicas) > min_replicas
+                and t - last_pressure_t >= scale_down_idle_s
+                and t - last_scale_t >= scale_up_cooldown_s):
+            # retire the most recently added idle replica
+            for ridx in range(len(replicas) - 1, min_replicas - 1, -1):
+                if replicas[ridx]["free_at"] <= t:
+                    replicas.pop(ridx)
+                    last_scale_t = t
+                    break
+        timeline.append((round(t, 3), len(replicas)))
+    resolved = ok + late + shed + rejected
+    return {"offered": len(arrivals),
+            "admitted": admitted, "rejected": rejected, "shed": shed,
+            "completed_ok": ok, "completed_late": late,
+            "ledger_balanced": resolved == len(arrivals),
+            "goodput_rps": ok / duration_s,
+            "goodput_fraction": ok / max(admitted, 1),
+            "mean_wave_size": (sum(wave_sizes) / max(len(wave_sizes), 1)),
+            "max_replicas_seen": max_replicas_seen,
+            "final_replicas": len(replicas),
+            "replica_timeline": timeline[:: max(1, len(timeline) // 200)]}

@@ -1,2 +1,28 @@
-from repro.serving.engine import (ReplicaPool, Request, Response,  # noqa: F401
-                                  ServingEngine, ServingReplica)
+"""Serving layer: batched engine + replica pool (closed loop) and the
+open-loop front door (admission control, EDF queueing, adaptive
+batching, autoscaling — see frontdoor.py).
+
+Attributes resolve lazily so the pure pieces (`repro.serving.load`
+traces, `repro.serving.slo` metrics — used by the DES simulator and the
+load harness) never pay the engine's jax import.
+"""
+_ENGINE = ("ReplicaPool", "Request", "Response", "ServingEngine",
+           "ServingReplica", "length_aligned_waves")
+_FRONTDOOR = ("AdmissionError", "BatchController", "DeadlineShedError",
+              "FrontDoor", "ServeTicket")
+_SLO = ("SLOTracker",)
+
+__all__ = list(_ENGINE + _FRONTDOOR + _SLO)
+
+
+def __getattr__(name):
+    if name in _ENGINE:
+        from repro.serving import engine
+        return getattr(engine, name)
+    if name in _FRONTDOOR:
+        from repro.serving import frontdoor
+        return getattr(frontdoor, name)
+    if name in _SLO:
+        from repro.serving import slo
+        return getattr(slo, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -9,8 +9,11 @@ program). Lanes that reach their token budget are masked out but keep
 riding the batch until the wave drains; new requests start the next wave.
 
 This is iteration-level batching (Orca-style) with aligned positions; a
-vLLM-style paged KV cache with per-lane clocks is noted as future work in
-DESIGN.md.
+vLLM-style paged KV cache with per-lane clocks remains future work (see
+the serving sections of BENCHMARKS.md and the open items in ROADMAP.md).
+The open-loop tier above this engine — admission control, deadline
+queueing, adaptive batching, autoscaling — lives in
+repro.serving.frontdoor; this module stays the closed-loop data plane.
 
 Scale-out: `ReplicaPool` runs N `ServingReplica` *actors* (stateful
 `@remote` classes) on the core runtime — each replica holds its own
@@ -234,14 +237,19 @@ class ReplicaPool:
                     f"{r.id}->replica"
                     f"{self._wave_meta.get(r.id, ('?',))[0]}"
                     for r in pending)
+                elapsed = time.perf_counter() - (deadline - timeout)
+                queue_depth = sum(
+                    len(self._wave_meta.get(r.id, (0, ()))[1])
+                    for r in pending)
                 # free before raising: an abandoned wave must not pin
                 # store memory for the life of the pool
                 self._core.free(pending)
                 for r in pending:
                     self._wave_meta.pop(r.id, None)
                 raise TimeoutError(
-                    f"{len(pending)} serving wave(s) incomplete after "
-                    f"{timeout}s (pending refs freed): {where}")
+                    f"{len(pending)} serving wave(s) ({queue_depth} "
+                    f"request(s)) incomplete after {elapsed:.1f}s elapsed "
+                    f"vs {timeout}s deadline (pending refs freed): {where}")
             done, pending = self._core.wait(
                 pending, num_returns=1, timeout=min(remaining, 30.0))
             for ref in done:

@@ -1,0 +1,328 @@
+"""Serving-layer tests: `length_aligned_waves` edge cases, the open-loop
+front door (admission control, EDF deadline shedding, AIMD batch
+control, autoscaling, hot spares, replica-kill disposition), the SLO
+tracker's ledger, the seeded load traces, and the planned-retirement
+runtime hook (`Cluster.retire_actor` must bar restart-with-replay
+resurrection and release the standing reservation)."""
+import time
+
+import numpy as np
+import pytest
+
+from repro import core
+from repro.serving import load as serving_load
+from repro.serving.engine import (Request, Response, length_aligned_waves)
+from repro.serving.frontdoor import (AdmissionError, BatchController,
+                                     DeadlineShedError, FrontDoor)
+from repro.serving.slo import SLOTracker
+
+
+@pytest.fixture()
+def cluster():
+    c = core.init(num_nodes=2, workers_per_node=2)
+    yield c
+    core.shutdown()
+
+
+class FakeEngine:
+    """Deterministic sleep-based engine: service time is affine in the
+    wave size, so batching dynamics are controlled without jax."""
+
+    def __init__(self, base_s=0.004, per_req_s=0.002):
+        self.base_s = base_s
+        self.per_req_s = per_req_s
+
+    def serve(self, requests, max_wave=8):
+        time.sleep(self.base_s + self.per_req_s * len(requests))
+        now = time.perf_counter()
+        return [Response(r.request_id, [1] * r.max_new_tokens,
+                         now - r.created) for r in requests]
+
+
+def fake_engine_factory():
+    return FakeEngine()
+
+
+# ------------------------------------------- length_aligned_waves edges
+
+def test_waves_empty_request_list():
+    assert length_aligned_waves([], max_wave=8) == []
+
+
+def test_waves_single_oversized_group_chunks():
+    reqs = [Request(i, prompt=list(range(4))) for i in range(10)]
+    waves = length_aligned_waves(reqs, max_wave=4)
+    assert [len(w) for w in waves] == [4, 4, 2]
+    # every wave is length-homogeneous
+    assert all(len({len(r.prompt) for r in w}) == 1 for w in waves)
+
+
+def test_waves_all_distinct_lengths():
+    reqs = [Request(i, prompt=list(range(i + 1))) for i in range(6)]
+    waves = length_aligned_waves(reqs, max_wave=8)
+    # no two requests share a length: one singleton wave each, sorted
+    assert [len(w) for w in waves] == [1] * 6
+    assert [len(w[0].prompt) for w in waves] == [1, 2, 3, 4, 5, 6]
+
+
+def test_waves_order_stable_within_length_bucket():
+    reqs = ([Request(i, prompt=[0, 1]) for i in range(5)]
+            + [Request(100 + i, prompt=[0, 1, 2]) for i in range(3)])
+    # interleave submission order across buckets
+    mixed = [reqs[0], reqs[5], reqs[1], reqs[6], reqs[2], reqs[7],
+             reqs[3], reqs[4]]
+    waves = length_aligned_waves(mixed, max_wave=8)
+    short = [r.request_id for w in waves for r in w if len(r.prompt) == 2]
+    long = [r.request_id for w in waves for r in w if len(r.prompt) == 3]
+    assert short == [0, 1, 2, 3, 4]       # arrival order preserved
+    assert long == [100, 101, 102]
+
+
+# -------------------------------------------------------- AIMD control
+
+def test_batch_controller_aimd():
+    c = BatchController(target_wave_s=0.05, max_batch=8, initial=1)
+    for _ in range(10):
+        c.observe(0.01)                   # under target: +1 each
+    assert c.size == 8                    # capped at max_batch
+    c.observe(0.10)                       # overshoot: 10% backoff
+    assert c.size == 7
+    for _ in range(40):
+        c.observe(0.10)                   # sustained overshoot
+    assert c.size == 1                    # floored at 1
+
+
+# --------------------------------------------------------- SLO tracker
+
+def test_slo_ledger_and_goodput():
+    t = SLOTracker(window_s=60.0)
+    for _ in range(4):
+        t.record_admit()
+    t.record_completion(0.01, met_deadline=True, now=100.0)
+    t.record_completion(0.02, met_deadline=True, now=101.0)
+    t.record_completion(0.50, met_deadline=False, now=102.0)
+    t.record_shed()
+    assert t.resolved() == 4
+    # 2 within-deadline completions over the 2s first..last span
+    assert t.overall_goodput() == pytest.approx(1.0)
+    snap = t.snapshot(now=102.0)
+    assert snap["completed_ok"] == 2
+    assert snap["completed_late"] == 1
+    assert snap["shed"] == 1
+    assert snap["latency_p50_ms"] == pytest.approx(20.0)
+
+
+# ---------------------------------------------------------- load traces
+
+def test_traces_seeded_and_shaped():
+    a = serving_load.poisson_trace(200.0, 2.0, seed=7)
+    b = serving_load.poisson_trace(200.0, 2.0, seed=7)
+    assert a == b                          # deterministic under a seed
+    assert a != serving_load.poisson_trace(200.0, 2.0, seed=8)
+    assert all(0 <= t < 2.0 for t, _, _ in a)
+    assert all(l in serving_load.LENGTH_BUCKETS for _, l, _ in a)
+    # ~200 req/s over 2s; generous bounds for the seeded draw
+    assert 250 < len(a) < 550
+
+    burst = serving_load.burst_trace(50.0, 150.0, 3.0, 1.0, 2.0, seed=3)
+    inside = sum(1 for t, _, _ in burst if 1.0 <= t < 2.0)
+    outside = len(burst) - inside
+    assert inside > outside               # the step dominates its window
+
+    diurnal = serving_load.diurnal_trace(100.0, 0.8, 2.0, 4.0, seed=5)
+    assert all(0 <= t < 4.0 for t, _, _ in diurnal)
+    assert len(diurnal) > 100
+    with pytest.raises(ValueError):
+        serving_load.diurnal_trace(100.0, 1.5, 2.0, 4.0, seed=5)
+
+
+def test_trace_materialize_and_replay():
+    trace = serving_load.poisson_trace(500.0, 0.2, seed=11)
+    reqs = serving_load.materialize(trace, seed=1)
+    assert len(reqs) == len(trace)
+    assert all(len(r.prompt) == plen
+               for (_, r), (_, plen, _) in zip(reqs, trace))
+    seen = []
+    n = serving_load.replay(reqs, seen.append)
+    assert n == len(reqs) == len(seen)
+
+
+# ----------------------------------------------------------- front door
+
+def test_frontdoor_serves_and_adapts(cluster):
+    fd = FrontDoor(fake_engine_factory, num_replicas=2,
+                   max_queue=64, default_deadline_s=1.0,
+                   target_wave_s=0.03, max_batch=8,
+                   resources={"cpu": 0.25})
+    try:
+        tickets = [fd.submit(np.arange(8), 2) for _ in range(40)]
+        responses = [t.result(timeout=20) for t in tickets]
+        assert sorted(r.request_id for r in responses) == list(range(40))
+        st = fd.stats()
+        assert st["completed_ok"] + st["completed_late"] == 40
+        assert st["dispatched_past_deadline"] == 0
+        # AIMD grew past the initial singleton waves
+        assert max(st["batch_limits"]) > 1
+    finally:
+        fd.close()
+
+
+def test_frontdoor_admission_control(cluster):
+    fd = FrontDoor(fake_engine_factory, num_replicas=1, max_queue=4,
+                   default_deadline_s=5.0, resources={"cpu": 0.25})
+    try:
+        tickets, rejected = [], 0
+        for _ in range(50):
+            try:
+                tickets.append(fd.submit(np.arange(8), 2))
+            except AdmissionError:
+                rejected += 1
+        assert rejected > 0                # the bounded queue refused some
+        for t in tickets:
+            t.result(timeout=20)           # admitted ones all complete
+        assert fd.stats()["rejected"] == rejected
+    finally:
+        fd.close()
+
+
+def test_frontdoor_deadline_shedding(cluster):
+    # service 60ms vs 25ms deadlines: most queued requests expire and
+    # must be shed, never dispatched
+    fd = FrontDoor(lambda: FakeEngine(base_s=0.06, per_req_s=0.0),
+                   num_replicas=1, max_queue=128,
+                   default_deadline_s=0.025, target_wave_s=0.03,
+                   resources={"cpu": 0.25})
+    try:
+        tickets = [fd.submit(np.arange(8), 2) for _ in range(30)]
+        shed = ok = late = 0
+        for t in tickets:
+            try:
+                t.result(timeout=20)
+                ok += 1
+            except DeadlineShedError:
+                shed += 1
+        st = fd.stats()
+        assert shed > 0
+        assert st["dispatched_past_deadline"] == 0
+        assert st["admitted"] == (st["completed_ok"] + st["completed_late"]
+                                  + st["shed"] + st["failed"])
+    finally:
+        fd.close()
+
+
+def test_frontdoor_autoscale_up_and_down(cluster):
+    fd = FrontDoor(fake_engine_factory, num_replicas=1, min_replicas=1,
+                   max_replicas=3, max_queue=256, default_deadline_s=5.0,
+                   scale_up_queue_depth=4, scale_up_cooldown_s=0.1,
+                   scale_down_idle_s=0.3, resources={"cpu": 0.25})
+    try:
+        tickets = [fd.submit(np.arange(8), 2) for _ in range(60)]
+        for t in tickets:
+            t.result(timeout=30)
+        assert fd.replica_count() > 1      # queue depth drove scale-up
+        deadline = time.perf_counter() + 10.0
+        while (fd.replica_count() > 1
+               and time.perf_counter() < deadline):
+            time.sleep(0.05)
+        assert fd.replica_count() == 1     # idle reclaimed to min
+    finally:
+        fd.close()
+
+
+def test_frontdoor_replica_kill_all_tickets_resolve(cluster):
+    # failure detection off: the driver kills by hand, like the
+    # ReplicaPool failure tests
+    fd = FrontDoor(fake_engine_factory, num_replicas=2, max_replicas=4,
+                   max_queue=256, default_deadline_s=2.0,
+                   resources={"cpu": 0.25})
+    try:
+        tickets = []
+        for i in range(60):
+            tickets.append(fd.submit(np.arange(8), 2))
+            if i == 30:
+                nid = cluster.gcs.actor_node(
+                    fd._replicas[0].handle.actor_id)
+                if nid is not None:
+                    cluster.kill_node(nid)
+            time.sleep(0.002)
+        values = errors = 0
+        for t in tickets:
+            try:
+                t.result(timeout=30)
+                values += 1
+            except (DeadlineShedError, core.TaskError, TimeoutError):
+                errors += 1
+        assert values + errors == 60       # no hung futures
+        assert values > 0
+        st = fd.stats()
+        assert st["admitted"] == (st["completed_ok"] + st["completed_late"]
+                                  + st["shed"] + st["failed"])
+    finally:
+        fd.close()
+
+
+def test_frontdoor_hot_spare_on_death(cluster):
+    fd = FrontDoor(fake_engine_factory, num_replicas=2, max_replicas=4,
+                   max_queue=256, default_deadline_s=5.0,
+                   scale_down_idle_s=60.0, resources={"cpu": 0.25})
+    try:
+        # keep traffic flowing so the ctl loop is active
+        tickets = [fd.submit(np.arange(8), 2) for _ in range(10)]
+        nid = cluster.gcs.actor_node(fd._replicas[0].handle.actor_id)
+        cluster.kill_node(nid)
+        deadline = time.perf_counter() + 10.0
+        while (fd.replica_count() < 3
+               and time.perf_counter() < deadline):
+            time.sleep(0.02)
+        assert fd.replica_count() == 3     # spare spawned over the loss
+        for t in tickets:
+            t.result(timeout=30)
+    finally:
+        fd.close()
+
+
+# ------------------------------------------------------ DES calibration
+
+def test_simulator_serving_diurnal_scales_with_wave():
+    from repro.core.simulator import serving_diurnal
+    m = serving_diurnal(num_nodes=50, mean_rate_hz=800.0, amplitude=0.8,
+                        period_s=10.0, duration_s=20.0, seed=3)
+    assert m["ledger_balanced"]
+    assert m["goodput_fraction"] > 0.8      # SLO holds through the cycle
+    assert m["max_replicas_seen"] > 2       # crest drove scale-up
+    assert m["final_replicas"] < m["max_replicas_seen"]  # trough reclaim
+    assert m["mean_wave_size"] > 1.0        # batching actually engaged
+    counts = [n for _, n in m["replica_timeline"]]
+    assert max(counts) <= 50                # never past the node fleet
+
+
+# ------------------------------------------------- retire_actor runtime
+
+def test_retire_actor_releases_and_stays_dead(cluster):
+    @core.remote
+    class Holder:
+        def __init__(self):
+            self.calls = 0
+
+        def ping(self):
+            self.calls += 1
+            return self.calls
+
+    h = Holder.options(resources={"cpu": 1.0}).submit()
+    assert core.get(h.ping.submit(), timeout=10) == 1
+    nid = cluster.gcs.actor_node(h.actor_id)
+    cluster.retire_actor(h.actor_id)
+    assert cluster.gcs.actor_retired(h.actor_id)
+    # the standing grant released: wait for the context thread to exit
+    node = cluster.nodes[nid]
+    deadline = time.perf_counter() + 5.0
+    while (sum(node._actor_reserved.values()) > 0
+           and time.perf_counter() < deadline):
+        time.sleep(0.01)
+    assert sum(node._actor_reserved.values()) == 0
+    # killing the node must NOT resurrect the retired actor
+    cluster.kill_node(nid)
+    time.sleep(0.2)
+    assert cluster.gcs.actor_node(h.actor_id) == nid  # never relocated
+    assert all(node.actor_context(h.actor_id) is None
+               for node in cluster.live_nodes())
