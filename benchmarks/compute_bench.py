@@ -1,0 +1,311 @@
+"""PR 9 compute-plane benchmarks: kernel tasks, sharded params, DES.
+
+Three sections:
+
+  * ``kernel_task_e2e`` vs ``raw_jit`` — the SAME jitted matmul measured
+    as a bare ``fn(x)`` call and as a ``kernel_task`` round trip through
+    the cluster (submit -> gpu-typed placement -> device lane -> get),
+    in the same window. The difference is the whole compute-plane
+    dispatch overhead; the CI gate bounds ``e2e_p50 <= OVERHEAD_MULT *
+    raw_p50`` so scheduling never silently swamps the kernel.
+  * ``pallas_smoke`` — a real Pallas kernel (`repro.kernels.int8_matmul`,
+    interpret mode off-TPU) run once as a kernel task and checked
+    against its reference, so the bench exercises the actual kernel
+    path CI cares about, not just jnp.
+  * ``param_publish`` / ``param_fetch`` — `ParamSet.publish` of an
+    ~``--mbytes`` pytree into ``--shards`` shards, then a cold fetch;
+    records MB/s both ways and asserts the fetch is a zero-copy view of
+    the shard buffer.
+  * ``hetero_des`` — the `heterogeneous_fleet` DES scenario with costs
+    calibrated from BENCH_core.json + this file's own kernel_task_e2e;
+    gate: ``device_misplaced == 0``.
+
+Results land in ``benchmarks/results/compute_bench.json`` (this run)
+and upsert into ``BENCH_compute.json`` at the repo root (the tracked
+trajectory, same idiom as BENCH_core.json). ``--check-against NAME``
+gates against the committed entry; ``--smoke`` is the CI-sized run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+RESULTS = Path(__file__).resolve().parent / "results"
+REPO_ROOT = Path(__file__).resolve().parent.parent
+BENCH_FILE = REPO_ROOT / "BENCH_compute.json"
+sys.path.insert(0, str(REPO_ROOT / "src"))
+
+from repro import core                                   # noqa: E402
+from repro.compute import ParamSet, kernel_task          # noqa: E402
+from repro.core.simulator import SimCosts, heterogeneous_fleet  # noqa: E402
+
+# CI gate: a kernel-task round trip may cost at most this multiple of
+# the same jitted call made bare, in the same window (override via env).
+OVERHEAD_MULT = float(os.environ.get("COMPUTE_OVERHEAD_MULT", "6.0"))
+
+
+def _stats(ts):
+    xs = sorted(ts)
+
+    def pick(q):
+        return xs[min(len(xs) - 1, int(q * len(xs)))]
+
+    return {"p50_us": statistics.median(ts) * 1e6,
+            "p90_us": pick(0.90) * 1e6,
+            "p99_us": pick(0.99) * 1e6,
+            "mean_us": statistics.fmean(ts) * 1e6}
+
+
+def _bench(fn, n, warmup=3):
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return _stats(ts)
+
+
+def _matmul_payload(dim):
+    import jax
+    import jax.numpy as jnp
+
+    def mm(x):
+        return jnp.tanh(x @ x.T)
+
+    x = jnp.asarray(np.random.default_rng(0)
+                    .standard_normal((dim, dim), dtype=np.float32))
+    jitted = jax.jit(mm)
+    jax.block_until_ready(jitted(x))     # compile outside every window
+    return jitted, x
+
+
+def bench_kernel_dispatch(n, dim):
+    """Same jitted matmul, bare call vs kernel-task round trip — the
+    delta is dispatch + placement + lane handoff + result fetch."""
+    import jax
+    jitted, x = _matmul_payload(dim)
+
+    raw = _bench(lambda: jax.block_until_ready(jitted(x)), n)
+
+    kt = kernel_task(jitted, resources={"gpu": 1.0}, jit=False,
+                     warmup_args=(x,))
+    x_ref = core.put(np.asarray(x))      # arg ships from the store once
+
+    def roundtrip():
+        core.get(kt.submit(x_ref), timeout=60)
+
+    e2e = _bench(roundtrip, n)
+    e2e["overhead_vs_raw"] = round(
+        e2e["p50_us"] / max(raw["p50_us"], 1e-9), 2)
+    return raw, e2e
+
+
+def bench_pallas_smoke():
+    """One real Pallas kernel (interpret off-TPU) through kernel_task,
+    checked against its reference implementation."""
+    import jax.numpy as jnp
+    from repro.kernels import int8_matmul, quantize_weights
+    from repro.kernels.int8_matmul.ref import int8_matmul_ref
+
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((8, 128), dtype=np.float32))
+    w = jnp.asarray(rng.standard_normal((128, 128), dtype=np.float32))
+    wq, scales = quantize_weights(w)
+
+    kt = kernel_task(lambda xx: int8_matmul(xx, wq, scales), jit=False,
+                     resources={"gpu": 1.0})
+    t0 = time.perf_counter()
+    out = core.get(kt.submit(x), timeout=120)
+    ms = (time.perf_counter() - t0) * 1e3
+    ref = np.asarray(int8_matmul_ref(x, wq, scales))
+    err = float(np.max(np.abs(np.asarray(out) - ref)))
+    return {"ms": round(ms, 2), "max_abs_err": err, "ok": err < 1e-3}
+
+
+def bench_paramset(mbytes, shards):
+    """Publish/fetch throughput for an ~mbytes pytree, plus the
+    zero-copy assertion on the fetch path."""
+    n_leaves = 8
+    leaf_elems = int(mbytes * 1e6 / 4 / n_leaves)
+    rng = np.random.default_rng(2)
+    params = {"layers": tuple(
+        {"w": rng.standard_normal(leaf_elems).astype(np.float32)}
+        for _ in range(n_leaves))}
+    total = sum(v["w"].nbytes for v in params["layers"])
+
+    t0 = time.perf_counter()
+    ps = ParamSet.publish("bench", params, num_shards=shards)
+    publish_s = time.perf_counter() - t0
+
+    fresh = ParamSet.latest("bench")     # cold handle: no cached buffers
+    t0 = time.perf_counter()
+    fetched = fresh.fetch()
+    fetch_s = time.perf_counter() - t0
+
+    leaf = fetched["layers"][0]["w"]
+    shard0 = fresh._shard(0, timeout=10)
+    zero_copy = bool(np.shares_memory(leaf, shard0))
+    ok = np.array_equal(leaf, params["layers"][0]["w"])
+    ParamSet.drop("bench")
+    return {"bytes": total, "shards": len(ps.shard_ids),
+            "publish_ms": round(publish_s * 1e3, 2),
+            "fetch_ms": round(fetch_s * 1e3, 2),
+            "publish_mb_s": round(total / 1e6 / max(publish_s, 1e-9), 1),
+            "fetch_mb_s": round(total / 1e6 / max(fetch_s, 1e-9), 1),
+            "zero_copy": zero_copy, "roundtrip_ok": bool(ok)}
+
+
+def bench_hetero_des(kernel_e2e_us, smoke, seed):
+    costs = SimCosts.from_microbench(
+        str(REPO_ROOT / "BENCH_core.json"),
+        compute_path=str(BENCH_FILE))
+    if kernel_e2e_us:                    # prefer THIS run's measurement
+        costs = SimCosts(**{**costs.__dict__,
+                            "kernel_step_s": kernel_e2e_us * 1e-6})
+    r = heterogeneous_fleet(
+        num_cpu=20 if smoke else 80, num_gpu=5 if smoke else 20,
+        num_tasks=1000 if smoke else 4000, seed=seed, costs=costs)
+    return {k: (round(v, 6) if isinstance(v, float) else v)
+            for k, v in r.items()}
+
+
+def run(smoke: bool, seed: int, mbytes: float, shards: int) -> dict:
+    np.random.seed(seed)
+    n = 30 if smoke else 200
+    dim = 192 if smoke else 384
+
+    core.init(node_resources=[{"cpu": 4.0, "gpu": 1.0},
+                              {"cpu": 4.0}])
+    try:
+        raw, e2e = bench_kernel_dispatch(n, dim)
+        pallas = bench_pallas_smoke()
+        pset = bench_paramset(mbytes, shards)
+    finally:
+        core.shutdown()
+    des = bench_hetero_des(e2e["p50_us"], smoke, seed)
+    return {"raw_jit": raw, "kernel_task_e2e": e2e, "pallas_smoke": pallas,
+            "paramset": pset, "hetero_des": des,
+            "config": {"n": n, "dim": dim, "mbytes": mbytes,
+                       "shards": shards, "smoke": smoke, "seed": seed}}
+
+
+def update_bench_file(measurements: dict, run_name: str,
+                      path: Path = BENCH_FILE) -> dict:
+    """Upsert this run into BENCH_compute.json, preserving other runs
+    (same trajectory idiom as BENCH_core.json)."""
+    doc = {"schema": 1, "overhead_mult_limit": OVERHEAD_MULT, "runs": {}}
+    if path.exists():
+        try:
+            doc = json.loads(path.read_text())
+        except json.JSONDecodeError:
+            pass
+    doc.setdefault("runs", {})[run_name] = measurements
+    doc["speedup_run"] = run_name
+    path.write_text(json.dumps(doc, indent=1) + "\n")
+    return doc
+
+
+def check_gates(m: dict, ref_run: str = None,
+                path: Path = BENCH_FILE) -> bool:
+    """CI gates. Absolute: dispatch overhead within OVERHEAD_MULT of the
+    raw jit call (same window); Pallas output matches its reference;
+    ParamSet fetch is a zero-copy view and round-trips; the DES
+    heterogeneous fleet misplaces zero device tasks. Relative (when a
+    committed reference entry exists): kernel-task e2e p50 within
+    BENCH_REGRESSION_SLACK (default 3x) of the reference."""
+    ok = True
+    mult = m["kernel_task_e2e"]["overhead_vs_raw"]
+    good = mult <= OVERHEAD_MULT
+    print(f"compute-check dispatch: kernel-task e2e p50 "
+          f"{m['kernel_task_e2e']['p50_us']:.0f}us = {mult:.2f}x raw jit "
+          f"{m['raw_jit']['p50_us']:.0f}us (limit {OVERHEAD_MULT:.1f}x) "
+          f"{'ok' if good else 'TOO MUCH OVERHEAD'}")
+    ok &= good
+
+    good = m["pallas_smoke"]["ok"]
+    print(f"compute-check pallas: max abs err "
+          f"{m['pallas_smoke']['max_abs_err']:.2e} "
+          f"{'ok' if good else 'WRONG RESULT'}")
+    ok &= good
+
+    ps = m["paramset"]
+    good = ps["zero_copy"] and ps["roundtrip_ok"]
+    print(f"compute-check paramset: publish {ps['publish_mb_s']}MB/s "
+          f"fetch {ps['fetch_mb_s']}MB/s zero_copy={ps['zero_copy']} "
+          f"roundtrip={ps['roundtrip_ok']} {'ok' if good else 'BROKEN'}")
+    ok &= good
+
+    des = m["hetero_des"]
+    good = des["device_misplaced"] == 0
+    print(f"compute-check des: {des['finished']} finished, "
+          f"{des['kernel_tasks']} kernel tasks, misplaced "
+          f"{des['device_misplaced']} {'ok' if good else 'MISPLACED'}")
+    ok &= good
+
+    if ref_run:
+        slack = float(os.environ.get("BENCH_REGRESSION_SLACK", "3.0"))
+        try:
+            ref = json.loads(path.read_text())["runs"].get(ref_run)
+        except (OSError, json.JSONDecodeError, KeyError):
+            ref = None
+        if ref is None:
+            print(f"compute-check: no run {ref_run!r} in {path}; skipping")
+        else:
+            cur = m["kernel_task_e2e"]["p50_us"]
+            committed = ref["kernel_task_e2e"]["p50_us"]
+            # normalize out kernel-size differences between smoke and
+            # full runs: compare the dispatch MULTIPLE, not raw us
+            cur_mult = m["kernel_task_e2e"]["overhead_vs_raw"]
+            ref_mult = ref["kernel_task_e2e"]["overhead_vs_raw"]
+            limit = ref_mult * slack
+            good = cur_mult <= limit
+            print(f"compute-check vs {ref_run}: overhead {cur_mult:.2f}x "
+                  f"(committed {ref_mult:.2f}x, limit {limit:.2f}x; e2e "
+                  f"{cur:.0f}us vs {committed:.0f}us) "
+                  f"{'ok' if good else 'REGRESSION'}")
+            ok &= good
+    return bool(ok)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--mbytes", type=float, default=16.0)
+    ap.add_argument("--shards", type=int, default=2)
+    ap.add_argument("--run-name", default="pr9")
+    ap.add_argument("--check-against", default=None,
+                    help="gate against this committed BENCH_compute.json "
+                         "entry (plus the absolute gates)")
+    ap.add_argument("--out", default=None,
+                    help="override BENCH_compute.json path")
+    args = ap.parse_args()
+
+    m = run(args.smoke, args.seed, args.mbytes, args.shards)
+    RESULTS.mkdir(exist_ok=True)
+    (RESULTS / "compute_bench.json").write_text(
+        json.dumps(m, indent=1) + "\n")
+
+    bench_path = Path(args.out) if args.out else BENCH_FILE
+    if not args.smoke:
+        update_bench_file(m, args.run_name, bench_path)
+        print(f"updated {bench_path}")
+
+    ok = check_gates(m, args.check_against, bench_path)
+    print(json.dumps({k: m[k] for k in
+                      ("raw_jit", "kernel_task_e2e", "paramset")},
+                     indent=1))
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

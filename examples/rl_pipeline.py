@@ -22,6 +22,15 @@ shape — `update(batch)` then `weights()` then a generation of
 *seeds)`), so each step pays ONE batched control-plane registration
 instead of one round per task. `--eager` runs the original
 submit-per-task loop for comparison; both train the same policy.
+
+The fleet is heterogeneous (`node_resources=`): two nodes declare a
+"gpu" unit and two are cpu-only. The learner actor requests
+`{"gpu": 1}` via `.options()`, so it lands only on a device-typed node
+(and can still fail over: the second gpu node catches the actor
+restart under `--kill-node`), while rollouts stay on the cpu fleet.
+Every 10 iterations the driver publishes the current policy as a
+versioned `ParamSet` — the weight hot-swap handle an external serving
+tier would poll — and verifies the zero-copy fetch round-trips.
 """
 import argparse
 import time
@@ -31,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import core, dag
+from repro.compute import ParamSet
 
 
 def make_policy():
@@ -114,8 +124,12 @@ def main():
                          "loop is the default)")
     args = ap.parse_args()
 
-    cluster = core.init(num_nodes=4, workers_per_node=2)
-    learner = PolicyLearner.submit()
+    # heterogeneous fleet: two gpu-typed nodes (learner placement +
+    # failover target), two cpu-only rollout nodes
+    cluster = core.init(node_resources=[{"cpu": 2.0, "gpu": 1.0}] * 2
+                        + [{"cpu": 2.0}] * 2)
+    learner = PolicyLearner.options(
+        resources={"cpu": 1.0, "gpu": 1.0}).submit()
 
     # compiled step: the whole per-iteration graph — update the policy
     # with this step's batch, read the post-update weights (ordered
@@ -141,13 +155,21 @@ def main():
             cluster.kill_node(victim)
             print(f"!! killed node {victim} (the learner's node) "
                   "mid-training — actor replay + lineage active")
-        # consume in completion order; update on partial batches (R1)
+        # consume in completion order; update on partial batches (R1).
+        # A rollout may resolve to a *typed error* under --kill-node
+        # (e.g. its weights arg was lost past the actor's checkpoint and
+        # cannot be replayed) — skip it, the learner trains on whatever
+        # survived, which is exactly the paper's straggler/failure story
         batch = []
         while pending and len(batch) < 12:
             done, pending = core.wait(pending,
                                       num_returns=min(4, len(pending)),
                                       timeout=0.5)
-            batch.extend(core.get(done))
+            for r in done:
+                try:
+                    batch.append(core.get(r))
+                except core.TaskError:
+                    pass
         if step is not None:
             # one batched dispatch for update + weights + the whole
             # next generation; sink refs are ordinary futures
@@ -162,9 +184,26 @@ def main():
             w_ref = learner.weights.submit()
             pending += [simulate.submit(w_ref, 1000 * it + s)
                         for s in range(16 - len(pending))]
-        returns.append(core.get(ret_ref, timeout=30))
+        try:
+            returns.append(core.get(ret_ref, timeout=30))
+        except core.TaskError:
+            pass   # an unreplayable update under --kill-node: skip it
         if it % 5 == 0 or it == args.iters - 1:
             print(f"iter {it:3d}  mean return {np.mean(returns[-5:]):+.3f}")
+        if it % 10 == 9:
+            # versioned weight hot-swap handle for external consumers
+            w_now = core.get(learner.weights.submit(), timeout=30)
+            ps = ParamSet.publish("policy", w_now)
+            print(f"iter {it:3d}  published ParamSet policy@v{ps.version}"
+                  f" ({ps.total_bytes} bytes)")
+
+    latest = ParamSet.latest("policy") if args.iters >= 10 else None
+    if latest is not None:
+        fetched = latest.fetch()
+        ok = all(np.array_equal(np.asarray(w_now[k]), fetched[k])
+                 for k in w_now)
+        print(f"ParamSet policy@v{latest.version} fetch round-trip: "
+              f"{'ok' if ok else 'MISMATCH'}")
 
     improved = np.mean(returns[-5:]) > np.mean(returns[:5])
     mode = "eager" if args.eager else "compiled"

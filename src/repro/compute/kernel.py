@@ -1,0 +1,117 @@
+"""Kernel tasks: jitted jax/Pallas callables as device-typed tasks.
+
+`kernel_task` turns a compute function into a `RemoteFunction` whose
+resource request defaults to one device unit, so the scheduler places it
+only on nodes declaring that capacity and the node's dedicated device
+lane executes it. The wrapper:
+
+- jit-compiles the function once (unless it is already jitted or
+  ``jit=False``) — the Pallas ops wrappers in `repro.kernels` pick
+  interpret mode off-TPU themselves, so the same task runs in CI;
+- optionally warms the compile cache at *registration* time
+  (``warmup_args=``), so the first cluster dispatch measures dispatch,
+  not tracing;
+- blocks until the device has actually finished
+  (`jax.block_until_ready`) and logs a "kernel" event carrying the
+  on-device milliseconds, which `profiler.summarize` folds into
+  ``kernel_tasks`` / ``kernel_time_ms_mean``.
+
+Thread backend only for the lane pinning; under the process backend the
+resource ledger alone serializes device tasks (and the function must be
+module-level for spawn safety, like any process-backend task).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Dict, Optional, Tuple
+
+from repro.core.api import RemoteFunction
+from repro.core.worker import current_node, current_task
+
+try:  # the jax_pallas image bakes jax in; stay importable without it
+    import jax
+except ImportError:  # pragma: no cover
+    jax = None
+
+
+def _block(out: Any) -> Any:
+    """Wait for async device execution so the measured window covers the
+    kernel, not just its dispatch. No-op for plain numpy results."""
+    if jax is not None:
+        try:
+            return jax.block_until_ready(out)
+        except Exception:  # non-jax leaves (e.g. python scalars)
+            return out
+    return out
+
+
+def _instrument(fn, kernel_name: str):
+    @functools.wraps(fn)
+    def run(*args, **kwargs):
+        t0 = time.perf_counter()
+        out = _block(fn(*args, **kwargs))
+        ms = (time.perf_counter() - t0) * 1e3
+        node = current_node()
+        spec = current_task()
+        if node is not None and spec is not None:
+            node.gcs.log_event("kernel", spec.task_id,
+                               f"node{node.node_id}", ms=ms,
+                               kernel=kernel_name)
+        return out
+    return run
+
+
+class KernelFunction(RemoteFunction):
+    """A `RemoteFunction` whose payload is a (jitted) device kernel.
+
+    `warm(*args)` runs the function once on the calling thread and
+    blocks on the result — compile caches are per-process, so warming on
+    the driver covers every thread-backend worker.
+    """
+
+    def __init__(self, fn, *, resources: Optional[Dict[str, float]] = None,
+                 num_returns: int = 1, jit: bool = True,
+                 static_argnames: Optional[Tuple[str, ...]] = None,
+                 max_retries: int = -1, retry_exceptions=None,
+                 backoff: float = 0.0, deadline: float = 0.0):
+        self.kernel_fn = fn
+        if jit and jax is not None and not hasattr(fn, "lower"):
+            fn = jax.jit(fn, static_argnames=static_argnames)
+        self._compiled = fn
+        super().__init__(_instrument(fn, getattr(fn, "__name__",
+                                                 repr(fn))),
+                         num_returns=num_returns,
+                         resources=({"gpu": 1.0} if resources is None
+                                    else resources),
+                         max_retries=max_retries,
+                         retry_exceptions=retry_exceptions,
+                         backoff=backoff, deadline=deadline)
+
+    def warm(self, *args, **kwargs) -> "KernelFunction":
+        _block(self._compiled(*args, **kwargs))
+        return self
+
+
+def kernel_task(fn=None, *, resources: Optional[Dict[str, float]] = None,
+                num_returns: int = 1, jit: bool = True,
+                static_argnames: Optional[Tuple[str, ...]] = None,
+                warmup_args: Optional[tuple] = None,
+                max_retries: int = -1, retry_exceptions=None,
+                backoff: float = 0.0,
+                deadline: float = 0.0):
+    """Decorator/factory: ``@kernel_task`` or
+    ``kernel_task(fn, resources={"tpu": 1}, warmup_args=(x, y))``."""
+    def wrap(f) -> KernelFunction:
+        kf = KernelFunction(f, resources=resources,
+                            num_returns=num_returns, jit=jit,
+                            static_argnames=static_argnames,
+                            max_retries=max_retries,
+                            retry_exceptions=retry_exceptions,
+                            backoff=backoff, deadline=deadline)
+        if warmup_args is not None:
+            kf.warm(*warmup_args)
+        return kf
+    if fn is None:
+        return wrap
+    return wrap(fn)

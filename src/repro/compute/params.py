@@ -1,0 +1,194 @@
+"""Sharded model parameters as first-class, versioned objects.
+
+`ParamSet.publish` flattens a parameter pytree (nested dicts of arrays),
+packs the leaves into `num_shards` contiguous byte buffers, and `put`s
+each buffer into the object store — one multi-ref object per shard,
+refcounted and evictable like any other object, spread across nodes by
+the driver-put round-robin. Contiguity is what makes the read path
+zero-copy: a shard is a single ND payload, so `SharedMemoryStore.get`
+hands back a read-only view of the segment and every leaf is a
+dtype-cast slice of that view — no pickle, no concatenation, no copy.
+
+The *handle* (shard ids + per-leaf layout + version) lives in the
+control plane under ``paramset:{name}``. Publishing again bumps the
+version atomically and drops the previous version's owning refs, so old
+shards hit refcount zero and the MemoryManager reclaims them —
+consumers hot-swap by re-reading `ParamSet.latest(name)` between steps
+and fetch whichever version they already hold until then.
+
+Ownership: the *publisher's cluster* owns shard objects (a module
+registry holds the owning refs, keyed by cluster epoch). `latest()` and
+`fetch()` hand out borrows; a consumer that must outlive the publisher's
+next publish should copy, not borrow.
+
+When `rules` (a `repro.parallel.sharding.ShardingRules`) is given, each
+leaf's mesh PartitionSpec is recorded in the handle so a device-parallel
+consumer can lay shards onto its mesh without re-deriving specs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.api import ObjectRef, _cluster, get as _get, put as _put
+
+
+def _flatten(params: Any, prefix: str = "") -> List[Tuple[str, np.ndarray]]:
+    """Deterministic (sorted-key) flatten of nested dict/list/tuple
+    pytrees to ("a/b/w", array) leaves. Sequence positions get marked
+    keys ("#0" tuple / "~0" list) so `_unflatten` restores the exact
+    container types — model pytrees stack per-group layers in tuples."""
+    if isinstance(params, dict):
+        out: List[Tuple[str, np.ndarray]] = []
+        for k in sorted(params, key=str):
+            path = f"{prefix}/{k}" if prefix else str(k)
+            out.extend(_flatten(params[k], path))
+        return out
+    if isinstance(params, (list, tuple)):
+        mark = "#" if isinstance(params, tuple) else "~"
+        out = []
+        for i, v in enumerate(params):
+            key = f"{mark}{i}"
+            path = f"{prefix}/{key}" if prefix else key
+            out.extend(_flatten(v, path))
+        return out
+    return [(prefix, np.asarray(params))]
+
+
+def _unflatten(leaves: Dict[str, np.ndarray]) -> Any:
+    root: Dict[str, Any] = {}
+    for path, leaf in leaves.items():
+        parts = path.split("/")
+        d = root
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = leaf
+
+    def rebuild(node: Any) -> Any:
+        if not isinstance(node, dict):
+            return node
+        keys = list(node)
+        if keys and all(k[:1] in "#~" for k in keys):
+            seq = [rebuild(node[k])
+                   for k in sorted(keys, key=lambda s: int(s[1:]))]
+            return tuple(seq) if keys[0][0] == "#" else seq
+        return {k: rebuild(v) for k, v in node.items()}
+
+    return rebuild(root)
+
+
+# owning refs for the latest published version, per (cluster epoch,
+# name): replacing an entry drops the previous version's last owning
+# handles, which is exactly what lets the GC reclaim the old shards
+_OWNED: Dict[Tuple[int, str], List[ObjectRef]] = {}
+
+
+@dataclass
+class ParamSet:
+    """Versioned handle over one published parameter set."""
+    name: str
+    version: int
+    shard_ids: Tuple[str, ...]
+    # per-leaf layout: (path, shape, dtype, shard index, byte offset,
+    # nbytes, partition-spec string or None)
+    layout: Tuple[Tuple, ...]
+    total_bytes: int
+    _cache: Dict[int, np.ndarray] = field(default_factory=dict, repr=False)
+
+    # ------------------------------------------------------------ publish
+
+    @staticmethod
+    def publish(name: str, params: Any, num_shards: int = 1,
+                rules: Any = None) -> "ParamSet":
+        cluster = _cluster()
+        leaves = _flatten(params)
+        total = sum(leaf.nbytes for _, leaf in leaves)
+        num_shards = max(1, min(num_shards, len(leaves) or 1))
+        # greedy contiguous split on leaf boundaries, balanced by bytes
+        target = total / num_shards
+        layout: List[Tuple] = []
+        shard_parts: List[List[np.ndarray]] = [[] for _ in range(num_shards)]
+        shard_fill = [0] * num_shards
+        s = 0
+        for path, leaf in leaves:
+            if shard_fill[s] >= target and s < num_shards - 1:
+                s += 1
+            pspec = None
+            if rules is not None:
+                try:
+                    pspec = str(rules._param_spec(path, leaf.shape))
+                except Exception:
+                    pspec = None
+            flat = np.ascontiguousarray(leaf).view(np.uint8).reshape(-1)
+            layout.append((path, tuple(leaf.shape), str(leaf.dtype), s,
+                           shard_fill[s], leaf.nbytes, pspec))
+            shard_parts[s].append(flat)
+            shard_fill[s] += leaf.nbytes
+        refs = [_put(np.concatenate(parts) if parts
+                     else np.zeros(0, np.uint8))
+                for parts in shard_parts]
+        version = cluster.gcs.update(f"paramset_ver:{name}",
+                                     lambda v: (v or 0) + 1, default=0)
+        ps = ParamSet(name=name, version=version,
+                      shard_ids=tuple(r.id for r in refs),
+                      layout=tuple(layout), total_bytes=total)
+        cluster.gcs.put(f"paramset:{name}", {
+            "version": version, "shards": ps.shard_ids,
+            "layout": ps.layout, "bytes": total})
+        # install the new owning refs last: dropping the old version's
+        # handles may reclaim its shards immediately, and a concurrent
+        # latest() must already see the new handle by then
+        key = (cluster.epoch, name)
+        _OWNED.pop(key, None)
+        _OWNED[key] = refs
+        for k in [k for k in _OWNED if k[0] != cluster.epoch]:
+            del _OWNED[k]            # stale clusters: refs are inert
+        cluster.gcs.log_event("param_publish", f"{name}@v{version}",
+                              "driver", bytes=total, shards=len(refs))
+        return ps
+
+    @staticmethod
+    def latest(name: str) -> Optional["ParamSet"]:
+        cluster = _cluster()
+        h = cluster.gcs.get(f"paramset:{name}")
+        if h is None:
+            return None
+        return ParamSet(name=name, version=h["version"],
+                        shard_ids=tuple(h["shards"]),
+                        layout=tuple(h["layout"]),
+                        total_bytes=h["bytes"])
+
+    @staticmethod
+    def drop(name: str) -> None:
+        """Release the publisher's owning refs (shards reclaim once no
+        borrower pins them) and retract the handle."""
+        cluster = _cluster()
+        _OWNED.pop((cluster.epoch, name), None)
+        cluster.gcs.put(f"paramset:{name}", None)
+
+    # -------------------------------------------------------------- fetch
+
+    def shard_ref(self, i: int) -> ObjectRef:
+        """Borrowed ref for one shard — legal as a task argument."""
+        return ObjectRef(self.shard_ids[i])
+
+    def _shard(self, i: int, timeout: float) -> np.ndarray:
+        buf = self._cache.get(i)
+        if buf is None:
+            buf = _get(ObjectRef(self.shard_ids[i]), timeout=timeout)
+            self._cache[i] = buf
+        return buf
+
+    def fetch(self, timeout: float = 60.0) -> Any:
+        """Reassemble the full pytree. Each leaf is a zero-copy view of
+        its shard buffer (read-only when the buffer came out of a
+        shared-memory segment) — mutate via `apply`-style functional
+        updates and republish, never in place."""
+        leaves: Dict[str, np.ndarray] = {}
+        for path, shape, dtype, s, off, nbytes, _ in self.layout:
+            buf = self._shard(s, timeout)
+            leaves[path] = buf[off:off + nbytes].view(
+                np.dtype(dtype)).reshape(shape)
+        return _unflatten(leaves)

@@ -160,6 +160,45 @@
       load shapes live in ``repro.serving.load`` (Poisson / burst /
       diurnal traces; ``replay`` submits on the trace clock and never
       waits on completions).
+  12. Devices & kernels — nodes declare *typed device capacity* and the
+      scheduler treats it as a hard constraint (the paper's R5)::
+
+          init(node_resources=[{"cpu": 8.0, "gpu": 1.0},   # gpu node
+                               {"cpu": 8.0}])              # cpu node
+          cluster.add_node({"cpu": 8.0, "tpu": 4.0})       # elastic join
+
+      * Device keys ("gpu"/"tpu"/"accel", see ``repro.core.devices``)
+        are capacity like any other resource — but each device-holding
+        node additionally runs its device tasks on a dedicated
+        *executor lane* (one pinned thread per device key), so a kernel
+        never time-slices against the cpu worker pool and two kernel
+        tasks never contend for one device context.
+      * Passing ``node_resources=`` declares the topology *explicitly*,
+        which flips placement to **strict**: a task whose request no
+        declared node (live or dead — dead nodes restart with their
+        declared capacity) can ever satisfy is promptly sealed with
+        ``UnschedulableTaskError`` instead of parking forever. Without
+        ``node_resources=`` the cluster stays *elastic*: impossible
+        requests park and drain when a capable node joins.
+      * ``repro.compute.kernel_task`` wraps a jax/Pallas callable into
+        a device-typed remote function: jit-compiled once (and
+        optionally jit-warmed at registration via ``warmup_args=``),
+        blocked on ``jax.block_until_ready`` so completion means the
+        device finished, and timed as profiler "kernel" events
+        (``profiler.summarize`` -> ``kernel_tasks`` /
+        ``kernel_time_ms_mean`` / ``device_waits``). The Pallas ops in
+        ``repro.kernels`` pick interpret mode off-TPU, so kernel tasks
+        run everywhere CI does.
+      * ``repro.compute.ParamSet`` publishes a parameter pytree as
+        sharded, versioned objects: leaves pack into contiguous
+        per-shard byte buffers in the object store (refcounted,
+        evictable, zero-copy readable — a fetch leaf is a dtype-cast
+        slice view of its shard), with the handle in the control plane
+        under ``paramset:{name}``. ``publish`` again bumps the version
+        and drops the old shards' owning refs (GC reclaims them);
+        consumers hot-swap via ``ParamSet.latest(name)``. The
+        publisher's cluster owns the shards — borrowers that must
+        outlive the next publish should copy.
 
 Usage:
     cluster = init(num_nodes=4, workers_per_node=2)

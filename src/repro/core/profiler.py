@@ -44,7 +44,13 @@ def summarize(gcs: ControlPlane) -> Dict[str, float]:
     wave width), ``serve_retry`` (re-enqueues after replica failure),
     ``serve_scale_up`` / ``serve_scale_down`` / ``serve_spare``
     (autoscaler decisions), and ``actor_retired`` (planned actor
-    scale-down via Cluster.retire_actor)."""
+    scale-down via Cluster.retire_actor). Compute-plane counters come
+    from the device-typed kernel path (repro.compute): ``kernel``
+    (kernel-task executions, with on-device milliseconds for the mean),
+    ``device_wait`` (tasks that stalled for a busy device grant),
+    ``task_unschedulable`` (tasks sealed because no declared node can
+    ever satisfy their resources), and ``param_publish`` (ParamSet
+    versions published, with their total shard bytes)."""
     raw = gcs.events()
     tl: Dict[str, List] = defaultdict(list)
     evictions = reclaims = reconstructs_after_evict = 0
@@ -58,6 +64,9 @@ def summarize(gcs: ControlPlane) -> Dict[str, float]:
     serve_waves = serve_wave_requests = 0
     serve_scale_ups = serve_scale_downs = serve_spares = 0
     actors_retired = 0
+    kernel_tasks = device_waits = unschedulable = param_publishes = 0
+    kernel_ms_total = 0.0
+    param_bytes = 0
     for t, kind, task_id, where, extra in raw:
         tl[task_id].append((t, kind, where, extra))
         if kind == "evict":
@@ -110,6 +119,16 @@ def summarize(gcs: ControlPlane) -> Dict[str, float]:
             serve_spares += 1
         elif kind == "actor_retired":
             actors_retired += 1
+        elif kind == "kernel":
+            kernel_tasks += 1
+            kernel_ms_total += extra.get("ms", 0.0)
+        elif kind == "device_wait":
+            device_waits += 1
+        elif kind == "task_unschedulable":
+            unschedulable += 1
+        elif kind == "param_publish":
+            param_publishes += 1
+            param_bytes += extra.get("bytes", 0)
     submit_to_start, run_times, spills, locals_ = [], [], 0, 0
     for task_id, events in tl.items():
         events.sort()
@@ -162,6 +181,12 @@ def summarize(gcs: ControlPlane) -> Dict[str, float]:
         "serve_scale_downs": serve_scale_downs,
         "serve_spares": serve_spares,
         "actors_retired": actors_retired,
+        "kernel_tasks": kernel_tasks,
+        "kernel_time_ms_mean": kernel_ms_total / max(kernel_tasks, 1),
+        "device_waits": device_waits,
+        "tasks_unschedulable": unschedulable,
+        "param_publishes": param_publishes,
+        "param_bytes": float(param_bytes),
     }
 
 

@@ -9,6 +9,7 @@ table, and pending/running tasks on the dead node are resubmitted.
 """
 from __future__ import annotations
 
+import atexit
 import heapq
 import itertools
 import queue
@@ -24,11 +25,12 @@ from repro.core.backends import (ExecutionBackend, ProcessBackend,
 from repro.core.memory import MemoryManager, ObjectReclaimedError
 from repro.core.object_store import (MISSING, ObjectStore,
                                      SharedMemoryStore)
+from repro.core.devices import device_keys
 from repro.core.scheduler import (GlobalScheduler, LocalScheduler,
                                   UnschedulableActorError, _ref_ids)
 from repro.core.worker import (ActorContext, GetTimeoutError,
                                TaskDeadlineError, TaskUnrecoverableError,
-                               Worker, execute_task)
+                               UnschedulableTaskError, Worker, execute_task)
 
 # Bounds inline work-stealing recursion (a steal can fetch its own lost
 # args, which may steal again); past this depth fetch parks on the event.
@@ -39,6 +41,63 @@ _MAX_STEAL_DEPTH = 16
 # this fast path is meant to shorten.
 _MAX_STEAL_SCAN = 64
 _steal_ctx = threading.local()
+
+
+class DeviceLane:
+    """Dedicated executor lane for one device key on one node.
+
+    The resource ledger already guarantees at most ``capacity[key]``
+    device tasks hold a grant concurrently; the lane additionally pins
+    their *execution* to one dedicated thread per device key, so a
+    kernel task never time-slices against ordinary cpu tasks in the
+    shared worker pool and two kernel tasks never contend for the same
+    device context. Thread backend only — under the process backend the
+    ledger's capacity accounting is the sole (and sufficient) guard.
+    """
+
+    def __init__(self, node: "Node", key: str):
+        self.node = node
+        self.key = key
+        self.queue: "queue.Queue[Optional[TaskSpec]]" = queue.Queue()
+        self._thread = threading.Thread(
+            target=self._run, daemon=True,
+            name=f"lane-{key}-n{node.node_id}")
+        self._thread.start()
+        # a daemon lane thread reaped mid-kernel at interpreter exit
+        # aborts from XLA's C++ teardown; drain it even when the driver
+        # errors out before cluster.shutdown()
+        atexit.register(self.stop)
+
+    def submit(self, spec: TaskSpec) -> None:
+        self.queue.put(spec)
+
+    def stop(self) -> None:
+        self.queue.put(None)
+        # join: a daemon lane thread killed mid-kernel at interpreter
+        # exit aborts the process from XLA's C++ teardown
+        self._thread.join(timeout=10.0)
+
+    def drain_pending(self) -> List[TaskSpec]:
+        items: List[TaskSpec] = []
+        while True:
+            try:
+                s = self.queue.get_nowait()
+            except queue.Empty:
+                break
+            if s is not None:
+                items.append(s)
+        return items
+
+    def _run(self) -> None:
+        while True:
+            spec = self.queue.get()
+            if spec is None:
+                return
+            if not self.node.alive:
+                # raced a kill: the drain owns requeueing; a spec that
+                # slipped past it is LOST and lineage replay covers it
+                continue
+            execute_task(self.node, spec, f"lane-{self.key}")
 
 
 class Node:
@@ -95,6 +154,13 @@ class Node:
         else:
             self.backend = ThreadBackend(self, num_workers)
         self.backend.start()
+        # one dedicated executor lane per declared device key (thread
+        # backend): kernel tasks bypass the shared worker pool so they
+        # never time-slice against cpu tasks or each other on one device
+        self.device_lanes: Dict[str, DeviceLane] = {}
+        if backend != "process":
+            for key in device_keys(self.capacity):
+                self.device_lanes[key] = DeviceLane(self, key)
 
     # ----------------------------------------------------------- heartbeats
 
@@ -223,6 +289,12 @@ class Node:
     # ------------------------------------------------------------- dataflow
 
     def dispatch(self, spec: TaskSpec) -> None:
+        if self.device_lanes:
+            for key in device_keys(spec.resources):
+                lane = self.device_lanes.get(key)
+                if lane is not None:
+                    lane.submit(spec)
+                    return
         self.backend.submit(spec)
 
     def prefetch_args(self, spec: TaskSpec) -> None:
@@ -327,6 +399,8 @@ class Node:
     def shutdown(self) -> None:
         self.stop_heartbeat()
         self.drain_actors()   # closes every actor mailbox
+        for lane in self.device_lanes.values():
+            lane.stop()
         self.backend.shutdown()
         self.store.close()
 
@@ -465,7 +539,8 @@ class Cluster:
                  heartbeat_interval_s: float = 0.05,
                  heartbeat_miss: int = 3,
                  hung_task_timeout_s: Optional[float] = None,
-                 backend: str = "thread"):
+                 backend: str = "thread",
+                 node_resources: Optional[List[Dict[str, float]]] = None):
         if backend not in ("thread", "process"):
             raise ValueError(
                 f"unknown execution backend {backend!r}: expected "
@@ -511,8 +586,18 @@ class Cluster:
         self._node_defaults = (workers_per_node, spill_threshold,
                                transfer_latency_s, store_capacity_bytes,
                                backend)
-        for _ in range(num_nodes):
-            self.add_node(res)
+        # an explicitly declared heterogeneous topology (one capacity
+        # dict per node) is a contract: a task requesting resources no
+        # declared node can ever hold seals promptly with
+        # UnschedulableTaskError instead of parking for elastic
+        # scale-up that was never promised
+        self.strict_placement = node_resources is not None
+        if node_resources is not None:
+            for node_res in node_resources:
+                self.add_node(node_res)
+        else:
+            for _ in range(num_nodes):
+                self.add_node(res)
         if failure_detection:
             self.detector.start()
         elif hung_task_timeout_s:
@@ -535,6 +620,37 @@ class Cluster:
     def park_unschedulable(self, spec: TaskSpec) -> None:
         with self._unsched_lock:
             self._unschedulable.append(spec)
+
+    def seal_unschedulable(self, spec: TaskSpec) -> None:
+        """Resolve a never-satisfiable task promptly: store a typed
+        UnschedulableTaskError on its return ids and release graph
+        dependents (they receive the error — same propagation rule as a
+        raising task). Mirrors `expire_deadline`: the DONE transition is
+        atomic, so a racing completion wins and this is a no-op."""
+        won: List[int] = []
+
+        def trans(s):
+            if s in (TASK_PENDING, TASK_RUNNING, TASK_LOST):
+                won.append(1)
+                return TASK_DONE
+            return s
+
+        self.gcs.update(f"task_state:{spec.task_id}", trans)
+        if not won:
+            return
+        err = UnschedulableTaskError(
+            f"task {spec.task_id} ({spec.func_name}) requests "
+            f"{spec.resources!r}, which no declared node can ever "
+            f"satisfy")
+        live = self.live_nodes()
+        for rid in spec.return_ids:
+            if live and not self._live_locs(rid):
+                live[0].store.put(rid, err)
+        self.memory.on_task_done(spec)
+        self.gcs.log_event("task_unschedulable", spec.task_id, "global")
+        if spec.graph_inv is not None:
+            for dep in self.graph_ready_after(spec):
+                self.graph_dispatch(dep)
 
     def drain_unschedulable(self) -> None:
         """Re-place parked tasks — fired whenever schedulable capacity
@@ -1297,6 +1413,8 @@ class Cluster:
         backlog + run queue) for resubmission."""
         requeue = node.local_scheduler.drain()
         requeue.extend(node.backend.drain_pending())
+        for lane in node.device_lanes.values():
+            requeue.extend(lane.drain_pending())
         return requeue
 
     def _resubmit_drained(self, specs: List[TaskSpec]) -> None:

@@ -41,6 +41,7 @@ import time
 from typing import TYPE_CHECKING, List, Optional
 
 from repro.core.control_plane import ControlPlane, TaskSpec
+from repro.core.devices import device_keys
 
 if TYPE_CHECKING:  # pragma: no cover
     from repro.core.runtime import Cluster, Node
@@ -262,6 +263,11 @@ class LocalScheduler:
                                    f"node{node.node_id}")
                 node.dispatch(spec)
                 return
+            if device_keys(spec.resources):
+                # every device unit is busy: the task waits for a grant
+                # release, which the profiler surfaces as a device stall
+                self.gcs.log_event("device_wait", spec.task_id,
+                                   f"node{node.node_id}")
             # backlog only work this node can eventually run: capacity
             # held by standing actor grants never frees, so a task that
             # exceeds steady-state capacity would starve here (a forced
@@ -384,15 +390,31 @@ class GlobalScheduler:
                 best, best_score = n, score
         return best
 
+    def _never_satisfiable(self, spec: TaskSpec) -> bool:
+        """Under an explicitly declared topology (``node_resources=``),
+        a request that no node's *raw* capacity covers — live or dead,
+        since a dead node restarts with its declared capacity — can
+        never be placed; parking it would hang every getter forever.
+        Elastic clusters (the default) keep parking: add_node drains."""
+        if not getattr(self.cluster, "strict_placement", False):
+            return False
+        return not any(n.satisfies(spec.resources)
+                       for n in self.cluster.nodes)
+
     def place(self, spec: TaskSpec) -> None:
         with self._locks[hash(spec.task_id) % len(self._locks)]:
             best = self._select_node(spec)
-            if best is None:
-                # no node can run this now or ever (raw capacity too
-                # small, or standing actor grants cover it everywhere):
-                # park until topology changes or a reservation releases
+            if best is None and not self._never_satisfiable(spec):
+                # no node can run this *now* (dead holders, or standing
+                # actor grants cover it everywhere): park until topology
+                # changes or a reservation releases
                 self.cluster.park_unschedulable(spec)
                 return
+        if best is None:
+            # outside the shard lock: sealing stores errors and may
+            # release graph dependents
+            self.cluster.seal_unschedulable(spec)
+            return
         # outside the shard lock: transfer + dispatch don't need to
         # serialize with other placement decisions
         self.gcs.log_event("sched_global", spec.task_id,

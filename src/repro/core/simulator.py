@@ -41,10 +41,16 @@ class SimCosts:
                                      # root handoff (charged once per
                                      # execute; chained nodes then run
                                      # with no per-task scheduling cost)
+    kernel_step_s: float = 500e-6    # one device kernel step end to end
+                                     # (dispatch + on-device time),
+                                     # calibrated from BENCH_compute.json
+                                     # kernel_task_e2e when present
 
     @classmethod
     def from_microbench(cls, path: str = "BENCH_core.json",
-                        run: Optional[str] = None) -> "SimCosts":
+                        run: Optional[str] = None,
+                        compute_path: str = "BENCH_compute.json"
+                        ) -> "SimCosts":
         """Calibrate the cost model from measured runtime latencies
         (benchmarks/microbench.py writes BENCH_core.json at the repo
         root). Mapping: submit p50 -> local scheduling cost; gcs_put p50
@@ -54,13 +60,33 @@ class SimCosts:
         when the file or run is absent."""
         import json
         import pathlib
+        # device kernel step: the compute bench's measured kernel-task
+        # round trip (BENCH_compute.json, written by compute_bench.py).
+        # Calibrated independently of the core file so a compute-only
+        # record still takes effect.
+        kernel_step = cls.kernel_step_s
+        cp = pathlib.Path(compute_path)
+        if cp.exists():
+            try:
+                cdoc = json.loads(cp.read_text())
+                cruns = cdoc.get("runs", {})
+                cdata = (cruns.get(run) if run else None) \
+                    or (cruns.get(cdoc.get("speedup_run"))
+                        if cdoc.get("speedup_run") else None) \
+                    or (next(iter(cruns.values())) if cruns else None)
+                if cdata and "kernel_task_e2e" in cdata:
+                    kernel_step = max(
+                        cdata["kernel_task_e2e"]["p50_us"] * 1e-6, 1e-6)
+            except (OSError, json.JSONDecodeError, KeyError,
+                    TypeError):  # pragma: no cover
+                pass
         p = pathlib.Path(path)
         if not p.exists():
-            return cls()
+            return cls(kernel_step_s=kernel_step)
         try:
             doc = json.loads(p.read_text())
         except (OSError, json.JSONDecodeError):  # pragma: no cover
-            return cls()
+            return cls(kernel_step_s=kernel_step)
         runs = doc.get("runs", {})
         data = runs.get(run) if run else None
         if data is None:
@@ -70,7 +96,7 @@ class SimCosts:
             data = (runs.get(latest) if latest else None) \
                 or runs.get("pr2") or runs.get("pr1") or runs.get("seed")
         if not data:
-            return cls()
+            return cls(kernel_step_s=kernel_step)
         try:
             us = 1e-6
             submit = data["submit"]["p50_us"] * us
@@ -78,7 +104,7 @@ class SimCosts:
             get_done = data["get_done"]["p50_us"] * us
             e2e = data["e2e_local"]["p50_us"] * us
         except (KeyError, TypeError):  # pragma: no cover
-            return cls()
+            return cls(kernel_step_s=kernel_step)
         worker = max(e2e - submit - get_done, 1e-6)
         # actor dispatch overhead: measured method round trip minus the
         # submit and get legs (mirrors the worker-overhead derivation);
@@ -118,7 +144,8 @@ class SimCosts:
                    gcs_op_s=max(gcs_op, 1e-8),
                    actor_call_s=actor,
                    evict_s=evict,
-                   graph_dispatch_s=graph_dispatch)
+                   graph_dispatch_s=graph_dispatch,
+                   kernel_step_s=kernel_step)
 
 
 @dataclass
@@ -223,13 +250,21 @@ class ClusterSim:
     def __init__(self, num_nodes: int, workers_per_node: int = 8,
                  costs: SimCosts = SimCosts(), spill_threshold: int = 4,
                  seed: int = 0, store_capacity_bytes: Optional[int] = None,
-                 max_task_attempts: Optional[int] = None):
+                 max_task_attempts: Optional[int] = None,
+                 node_resources: Optional[List[Dict[str, float]]] = None):
         self.costs = costs
         self.spill_threshold = spill_threshold
         self.store_capacity_bytes = store_capacity_bytes
-        self.nodes = [SimNode(i, workers_per_node,
-                              store_capacity_bytes=store_capacity_bytes)
-                      for i in range(num_nodes)]
+        if node_resources is not None:
+            # explicit heterogeneous topology, mirroring the runtime's
+            # Cluster(node_resources=[...]) — one capacity dict per node
+            self.nodes = [SimNode(i, workers_per_node, resources=res,
+                                  store_capacity_bytes=store_capacity_bytes)
+                          for i, res in enumerate(node_resources)]
+        else:
+            self.nodes = [SimNode(i, workers_per_node,
+                                  store_capacity_bytes=store_capacity_bytes)
+                          for i in range(num_nodes)]
         self.now = 0.0
         self._eq: List[Tuple[float, int, str, object]] = []
         self._seq = 0
@@ -734,3 +769,61 @@ def serving_diurnal(num_nodes: int = 100, mean_rate_hz: float = 2000.0,
             "max_replicas_seen": max_replicas_seen,
             "final_replicas": len(replicas),
             "replica_timeline": timeline[:: max(1, len(timeline) // 200)]}
+
+
+# --------------------------------------------------- heterogeneous fleet
+
+def heterogeneous_fleet(num_cpu: int = 80, num_gpu: int = 20,
+                        workers_per_node: int = 8,
+                        num_tasks: int = 4000,
+                        kernel_fraction: float = 0.3,
+                        task_s: float = 1e-3,
+                        kernel_s: Optional[float] = None,
+                        seed: int = 0,
+                        costs: SimCosts = SimCosts()) -> Dict:
+    """Mixed cpu/gpu fleet under a blended workload (the paper's R5 at
+    scale): ``kernel_fraction`` of the stream requests ``{"gpu": 1}``
+    and costs one calibrated kernel step; the rest are ordinary cpu
+    tasks. Kernel tasks submitted on cpu-only nodes must spill to the
+    global scheduler and land only on gpu-capacity nodes — queueing
+    behind a busy device rather than misplacing — so the scenario's
+    headline metric, ``device_misplaced``, must be zero, while the cpu
+    stream keeps its local-first fast path."""
+    if kernel_s is None:
+        kernel_s = costs.kernel_step_s
+    topo = ([{"cpu": float(workers_per_node), "gpu": 1.0}] * num_gpu
+            + [{"cpu": float(workers_per_node)}] * num_cpu)
+    sim = ClusterSim(len(topo), workers_per_node, costs=costs, seed=seed,
+                     node_resources=topo)
+    rng = random.Random(seed)
+    num_nodes = len(topo)
+    # arrival span sized so the gpu lanes are saturated (forced queueing)
+    span = max(num_tasks * kernel_fraction * kernel_s / max(num_gpu, 1),
+               num_tasks * task_s / (num_nodes * workers_per_node))
+    kernel_ids = set()
+    for i in range(num_tasks):
+        if rng.random() < kernel_fraction:
+            kernel_ids.add(i)
+            t = SimTask(task_id=i, duration_s=kernel_s,
+                        submit_node=rng.randrange(num_nodes),
+                        resources={"cpu": 1.0, "gpu": 1.0})
+        else:
+            t = SimTask(task_id=i, duration_s=task_s,
+                        submit_node=rng.randrange(num_nodes))
+        sim.submit(t, at=rng.uniform(0.0, span))
+    sim.run()
+    gpu_capacity = {n.node_id for n in sim.nodes
+                    if n.capacity.get("gpu", 0.0) > 0.0}
+    kern_done = [t for t in sim.finished if t.task_id in kernel_ids]
+    misplaced = sum(1 for t in kern_done if t.node not in gpu_capacity)
+    kern_waits = sorted(t.start_t - t.submit_t for t in kern_done)
+    pick = lambda q: (kern_waits[min(len(kern_waits) - 1,  # noqa: E731
+                                     int(q * len(kern_waits)))]
+                      if kern_waits else 0.0)
+    return {"finished": len(sim.finished),
+            "kernel_tasks": len(kern_done),
+            "device_misplaced": misplaced,
+            "kernel_spilled": sum(1 for t in kern_done if t.spilled),
+            "kernel_wait_p50_s": pick(0.5),
+            "kernel_wait_p99_s": pick(0.99),
+            "throughput": sim.throughput()}

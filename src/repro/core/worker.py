@@ -60,6 +60,14 @@ class TaskDeadlineError(TaskError):
     their own timeout."""
 
 
+class UnschedulableTaskError(TaskError):
+    """No node in the cluster — live or dead — declares enough capacity
+    for the task's resource request, and the cluster topology was
+    declared explicitly (``node_resources=``), so waiting for elastic
+    scale-up is not the contract. Sealed on the return ids promptly at
+    placement time instead of parking the task forever."""
+
+
 class GetTimeoutError(TimeoutError):
     """``get(ref, timeout=)`` expired. Subclasses TimeoutError (existing
     callers keep working) and carries the producing task's control-plane
