@@ -1,0 +1,378 @@
+"""Streaming online-learning benchmark (BENCH_stream.json).
+
+Drives the full train-while-serve plane — `StreamSource` producer actor,
+`StreamLearner` with compiled per-step graphs and versioned `ParamSet`
+publishes, and the PR 8 `FrontDoor` hot-swapping replicas between waves
+— on seeded, replayable drifting streams. Four scenarios, four gates:
+
+  drift_recovery    abrupt mid-stream concept drift: post-drift online
+                    rolling accuracy must recover and beat a
+                    frozen-at-first-publish baseline scored on the SAME
+                    seeded rows (the paper's train-while-serve claim).
+  hotswap_overhead  same seeded stream A/B'd with hot-swap enabled vs
+                    disabled: swapping must never block a wave — the
+                    swap arm's request p99 must not regress past slack
+                    over the swap-disabled arm.
+  churn_plateau     sustained run (60s full / shorter smoke) under
+                    publish + batch churn: store residency must
+                    plateau — the GC reclaims superseded ParamSet
+                    versions and consumed mini-batches as fast as new
+                    ones land (late-window peak bounded by early peak).
+  learner_kill      mid-run fail-stop of the learner's node: the actor
+                    must recover via checkpoint + replay with a bounded
+                    staleness spike and ZERO hung serving tickets.
+
+The serving engine is the streaming plane's real `OnlineServingEngine`
+(logistic scoring + between-wave swap) with a small deterministic sleep,
+so the benchmark measures the plane's policies, not numpy. Results land
+in BENCH_stream.json under ``--run-name``. CI runs ``--smoke --seed 42``
+(drift_recovery + learner_kill, shortened) and fails on any gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import threading
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import core                                     # noqa: E402
+from repro.core.profiler import summarize                  # noqa: E402
+from repro.streaming.pipeline import StreamingPipeline     # noqa: E402
+from repro.streaming.sources import (DriftSpec,            # noqa: E402
+                                     StreamConfig)
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_stream.json")
+
+#: runtime + front-door thread prefixes that must not outlive teardown
+#: (the streaming plane adds no threads of its own — sources/learners
+#: are actors on the worker pool, the pipeline drives from the caller)
+THREAD_PREFIXES = ("worker-", "actor-", "heartbeat-", "failure-detector",
+                   "mm-reclaimer", "frontdoor")
+
+
+def window_acc(samples, lo: int, hi: int):
+    """(online, frozen, n) accuracy over served samples with
+    lo <= stream step < hi."""
+    win = [s for s in samples if lo <= s[0] < hi]
+    if not win:
+        return 0.0, 0.0, 0
+    return (sum(s[1] for s in win) / len(win),
+            sum(s[2] for s in win) / len(win), len(win))
+
+
+def _pipeline(cfg, **kw) -> StreamingPipeline:
+    kw.setdefault("publish_every", 4)
+    kw.setdefault("serve_per_batch", 8)
+    kw.setdefault("deadline_s", 0.5)
+    kw.setdefault("engine_base_s", 0.0005)
+    kw.setdefault("engine_per_req_s", 0.0001)
+    return StreamingPipeline(cfg, **kw)
+
+
+# -------------------------------------------- scenario: drift recovery
+
+def drift_recovery(seed: int, smoke: bool) -> dict:
+    """One abrupt concept drift mid-stream; the online arm (hot-swapped
+    weights) must recover in the post-drift tail and beat the frozen arm
+    scored on the identical seeded rows."""
+    num = 120 if smoke else 400
+    drift_at = num // 2
+    cfg = StreamConfig(dim=16, batch=32, seed=seed, interval_s=0.01,
+                       drifts=(DriftSpec(at_step=drift_at, kind="abrupt",
+                                         target="label"),))
+    cluster = core.init(num_nodes=3, workers_per_node=2)
+    p = _pipeline(cfg)
+    rep = p.run(num)
+    tail = drift_at + (num - drift_at) // 2
+    pre_on, _, pre_n = window_acc(p.samples, drift_at // 2, drift_at)
+    post_on, post_fr, post_n = window_acc(p.samples, tail, num)
+    s = summarize(cluster.gcs)
+    p.close()
+    core.shutdown()
+    return {
+        "batches": num, "drift_at": drift_at,
+        "pre_drift_acc": pre_on, "pre_window_n": pre_n,
+        "post_drift_acc_online": post_on,
+        "post_drift_acc_frozen": post_fr, "post_window_n": post_n,
+        "recovered": post_on > post_fr + 0.05 and post_on > 0.75,
+        "learner": rep["learner"], "source": rep["source"],
+        "slo": rep["slo"], "lost_steps": rep["lost_steps"],
+        "unresolved": rep["unresolved"],
+        "profiler": {k: s[k] for k in
+                     ("stream_batches", "drift_events", "weight_swaps",
+                      "swap_version_lag_mean", "learner_resets")},
+    }
+
+
+# ------------------------------------------ scenario: hot-swap overhead
+
+def hotswap_overhead(seed: int, smoke: bool) -> dict:
+    """Same seeded stream, two arms differing ONLY in whether replicas
+    hot-swap between waves. Swap must not cost tail latency: the swap
+    arm's p99 stays within multiplicative + additive slack of the
+    swap-disabled arm (slack absorbs scheduler noise at sub-ms p99s)."""
+    num = 100 if smoke else 300
+    arms = {}
+    for arm, swap in (("swap_enabled", True), ("swap_disabled", False)):
+        cfg = StreamConfig(dim=16, batch=32, seed=seed, interval_s=0.01)
+        core.init(num_nodes=3, workers_per_node=2)
+        p = _pipeline(cfg, swap=swap)
+        rep = p.run(num)
+        arms[arm] = {
+            "latency_p50_ms": rep["slo"]["latency_p50_ms"],
+            "latency_p99_ms": rep["slo"]["latency_p99_ms"],
+            "weight_swaps": rep["slo"]["weight_swaps"],
+            "completed_ok": rep["slo"]["completed_ok"],
+            "shed": rep["slo"]["shed"],
+            "unresolved": rep["unresolved"],
+            "dispatched_past_deadline":
+                rep["slo"]["dispatched_past_deadline"],
+        }
+        p.close()
+        core.shutdown()
+    p99_on = arms["swap_enabled"]["latency_p99_ms"]
+    p99_off = arms["swap_disabled"]["latency_p99_ms"]
+    return {
+        "batches": num, "arms": arms,
+        "p99_swap_ms": p99_on, "p99_noswap_ms": p99_off,
+        "swaps_in_swap_arm": arms["swap_enabled"]["weight_swaps"],
+        "no_wave_blocked": (arms["swap_enabled"]["weight_swaps"] > 0
+                            and p99_on <= p99_off * 1.5 + 5.0),
+    }
+
+
+# ------------------------------------------- scenario: churn plateau
+
+def churn_plateau(seed: int, smoke: bool) -> dict:
+    """Sustained publish + mini-batch churn with a store-residency
+    sampler: the GC must reclaim superseded ParamSet versions and
+    consumed batches, so late-run peak residency stays bounded by the
+    early-run peak (plateau, not a ramp)."""
+    duration_s = 6.0 if smoke else 60.0
+    chunk = 150
+    cfg = StreamConfig(dim=32, batch=64, seed=seed, interval_s=0.005)
+    cluster = core.init(num_nodes=3, workers_per_node=2)
+    p = _pipeline(cfg, publish_every=2, serve_per_batch=4)
+    samples: list = []
+    stop = threading.Event()
+    t0 = time.perf_counter()
+
+    def sampler():
+        while not stop.is_set():
+            samples.append((round(time.perf_counter() - t0, 2),
+                            sum(n.store.used_bytes
+                                for n in cluster.nodes if n.alive)))
+            stop.wait(0.1)
+
+    st = threading.Thread(target=sampler, name="bench-sampler",
+                          daemon=True)
+    st.start()
+    batches = 0
+    while time.perf_counter() - t0 < duration_s:
+        p.run(chunk)
+        batches += chunk
+    stop.set()
+    st.join(2.0)
+    src = {}
+    try:
+        src = core.get(p.source.stats.submit(), timeout=20.0)
+    except Exception:  # noqa: BLE001
+        pass
+    p.close()
+    s = summarize(cluster.gcs)
+    core.shutdown()
+    third = max(1, len(samples) // 3)
+    early_peak = max(b for _, b in samples[:third])
+    late_peak = max(b for _, b in samples[-third:])
+    return {
+        "duration_s": round(time.perf_counter() - t0, 2),
+        "batches": batches,
+        "residency_samples": len(samples),
+        "early_peak_bytes": early_peak, "late_peak_bytes": late_peak,
+        "final_bytes": samples[-1][1],
+        "reclaims": s["reclaims"], "param_publishes": s["param_publishes"],
+        "source": src,
+        "residency_timeline": samples[:: max(1, len(samples) // 60)],
+        "plateau": late_peak <= early_peak * 1.25 + 262144,
+    }
+
+
+# --------------------------------------------- scenario: learner kill
+
+def learner_kill(seed: int, smoke: bool) -> dict:
+    """Fail-stop the learner's node a third of the way in: the
+    checkpointed actor must recover (replay from its last checkpoint +
+    mailbox replay), publishes must resume (bounded staleness spike),
+    and every serving ticket must resolve — zero hangs."""
+    num = 150 if smoke else 500
+    kill_at = num // 3
+    cfg = StreamConfig(dim=16, batch=32, seed=seed, interval_s=0.01,
+                       drifts=(DriftSpec(at_step=num // 2, kind="abrupt",
+                                         target="label"),))
+    cluster = core.init(num_nodes=4, workers_per_node=2,
+                        failure_detection=True)
+    p = _pipeline(cfg, checkpoint_interval=8, deadline_s=0.5)
+    state = {"killed": None, "version_at_kill": 0}
+
+    def inject(consumed):
+        if consumed >= kill_at and state["killed"] is None:
+            nid = cluster.gcs.actor_node(p.learner.actor_id)
+            if nid is not None:
+                state["version_at_kill"] = p.frontdoor.slo.published_version
+                cluster.kill_node(nid)
+                state["killed"] = nid
+
+    rep = p.run(num, mid_run=inject)
+    s = summarize(cluster.gcs)
+    p.close()
+    core.shutdown()
+    published_after = rep["slo"]["published_version"]
+    return {
+        "batches": num, "killed_node": state["killed"],
+        "version_at_kill": state["version_at_kill"],
+        "published_after": published_after,
+        "publishes_resumed":
+            published_after > state["version_at_kill"],
+        "version_lag_max": rep["slo"]["version_lag_max"],
+        "staleness_bounded": rep["slo"]["version_lag_max"] <= 64,
+        "lost_steps": rep["lost_steps"],
+        "unresolved": rep["unresolved"],
+        "learner": rep["learner"], "source": rep["source"],
+        "slo": rep["slo"],
+        "node_failures": s["node_failures"],
+        "profiler": {k: s[k] for k in
+                     ("stream_batches", "weight_swaps",
+                      "learner_resets", "drift_events")},
+    }
+
+
+# -------------------------------------------------------------- gating
+
+def gate(results: dict, smoke: bool) -> list:
+    """Return the list of failed checks (empty = green)."""
+    failures = []
+
+    def check(cond, msg):
+        if not cond:
+            failures.append(msg)
+
+    if "drift_recovery" in results:
+        dr = results["drift_recovery"]
+        check(dr["recovered"],
+              f"drift_recovery: online post-drift acc "
+              f"{dr['post_drift_acc_online']:.3f} did not recover past "
+              f"frozen {dr['post_drift_acc_frozen']:.3f}")
+        check(dr["unresolved"] == 0,
+              f"drift_recovery: {dr['unresolved']} hung ticket(s)")
+        check(dr["slo"]["dispatched_past_deadline"] == 0,
+              "drift_recovery: request dispatched past deadline")
+        check(dr["slo"]["weight_swaps"] > 0,
+              "drift_recovery: replicas never hot-swapped")
+        check(dr["profiler"]["stream_batches"] >= dr["batches"],
+              "drift_recovery: stream_batches counter missing batches")
+    if "hotswap_overhead" in results:
+        hs = results["hotswap_overhead"]
+        check(hs["no_wave_blocked"],
+              f"hotswap_overhead: swap arm p99 {hs['p99_swap_ms']:.2f}ms "
+              f"regressed past slack over no-swap "
+              f"{hs['p99_noswap_ms']:.2f}ms (or no swaps happened)")
+        for arm, r in hs["arms"].items():
+            check(r["unresolved"] == 0,
+                  f"hotswap_overhead/{arm}: hung ticket(s)")
+            check(r["completed_ok"] > 0,
+                  f"hotswap_overhead/{arm}: nothing completed")
+    if "churn_plateau" in results:
+        ch = results["churn_plateau"]
+        check(ch["plateau"],
+              f"churn_plateau: late peak {ch['late_peak_bytes']}B "
+              f"not bounded by early peak {ch['early_peak_bytes']}B "
+              f"(residency ramp = GC leak)")
+        check(ch["reclaims"] > 0,
+              "churn_plateau: GC reclaimed nothing under churn")
+        check(ch["source"].get("outstanding", 1) == 0,
+              "churn_plateau: source still holds batch refs after drain")
+    if "learner_kill" in results:
+        lk = results["learner_kill"]
+        check(lk["killed_node"] is not None,
+              "learner_kill: no node was killed")
+        check(lk["unresolved"] == 0,
+              f"learner_kill: {lk['unresolved']} hung ticket(s)")
+        check(lk["publishes_resumed"],
+              "learner_kill: publishes never resumed after the kill")
+        check(lk["staleness_bounded"],
+              f"learner_kill: version lag spiked to "
+              f"{lk['version_lag_max']} (> 64)")
+        check(lk["node_failures"] >= 1,
+              "learner_kill: control plane recorded no node failure")
+    return failures
+
+
+def leaked_threads() -> list:
+    time.sleep(0.5)
+    return sorted(t.name for t in threading.enumerate()
+                  if t.is_alive() and t.name.startswith(THREAD_PREFIXES))
+
+
+def update_bench_file(results: dict, run_name: str,
+                      path: str = BENCH_PATH) -> None:
+    doc = {"schema": 1,
+           "metric": ("train-while-serve: post-drift recovery vs a "
+                      "frozen baseline on the same seeded stream, "
+                      "hot-swap p99 overhead, store-residency plateau "
+                      "under churn, and staleness/ticket disposition "
+                      "through a learner-node kill"),
+           "runs": {}}
+    if os.path.exists(path):
+        with open(path) as f:
+            doc = json.load(f)
+    doc.setdefault("runs", {})[run_name] = results
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: drift_recovery + learner_kill, "
+                    "shortened, no BENCH_stream.json write")
+    ap.add_argument("--run-name", default=None,
+                    help="record results under this run in "
+                    "BENCH_stream.json (e.g. pr10)")
+    args = ap.parse_args()
+
+    results = {}
+    if args.smoke:
+        results["drift_recovery"] = drift_recovery(args.seed, smoke=True)
+        results["learner_kill"] = learner_kill(args.seed, smoke=True)
+    else:
+        results["drift_recovery"] = drift_recovery(args.seed, False)
+        results["hotswap_overhead"] = hotswap_overhead(args.seed, False)
+        results["churn_plateau"] = churn_plateau(args.seed, False)
+        results["learner_kill"] = learner_kill(args.seed, False)
+
+    failures = gate(results, smoke=args.smoke)
+    leaks = leaked_threads()
+    if leaks:
+        failures.append(f"leaked threads after teardown: {leaks}")
+
+    print(json.dumps(results, indent=1, default=str))
+    if args.run_name and not args.smoke:
+        update_bench_file(results, args.run_name)
+        print(f"recorded run {args.run_name!r} in {BENCH_PATH}")
+    if failures:
+        print("\nSTREAM BENCH FAILURES:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        sys.exit(1)
+    print("\nstream bench: all gates green")
+
+
+if __name__ == "__main__":
+    main()

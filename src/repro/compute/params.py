@@ -21,18 +21,49 @@ registry holds the owning refs, keyed by cluster epoch). `latest()` and
 `fetch()` hand out borrows; a consumer that must outlive the publisher's
 next publish should copy, not borrow.
 
+Hot-swap safety: `fetch()` *pins* its shards in the MemoryManager for
+the duration of the read, then verifies the version is still live
+(refcount > 0, not freed) before touching data — so a republish that
+drops the old version's owning refs mid-read defers reclamation until
+the reader unpins, and a reader that lost the race outright gets a
+typed `ParamVersionRetiredError` instead of `ObjectReclaimedError`
+halfway through a multi-shard reassembly. `fetch(version=n)` resolves a
+specific version through the bounded per-version handle history
+(``paramset:{name}@v{n}``, last `KEEP_VERSION_HANDLES` publishes);
+`fetch_latest(name)` is the swap loop: retry on retired versions until
+a live one is read. Leaves returned by a completed fetch stay valid
+after the unpin — they are views over Python-held buffers (or
+zombie-parked shm segments), so a serving replica can keep using a
+superseded version until its next between-wave swap.
+
 When `rules` (a `repro.parallel.sharding.ShardingRules`) is given, each
 leaf's mesh PartitionSpec is recorded in the handle so a device-parallel
 consumer can lay shards onto its mesh without re-deriving specs.
 """
 from __future__ import annotations
 
+import itertools
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.api import ObjectRef, _cluster, get as _get, put as _put
+from repro.core.memory import ObjectReclaimedError
+
+
+class ParamVersionRetiredError(RuntimeError):
+    """The requested ParamSet version was superseded and its shards
+    already reclaimed — re-fetch `latest()` (or use `fetch_latest`)."""
+
+
+#: per-version handle records kept in the control plane (the shard data
+#: itself lives exactly as long as its owning refs — this bounds only
+#: the version *metadata* history used by `fetch(version=...)`)
+KEEP_VERSION_HANDLES = 8
+
+#: unique pin keys for concurrent pinned fetches
+_PIN_SEQ = itertools.count()
 
 
 def _flatten(params: Any, prefix: str = "") -> List[Tuple[str, np.ndarray]]:
@@ -95,13 +126,18 @@ class ParamSet:
     # nbytes, partition-spec string or None)
     layout: Tuple[Tuple, ...]
     total_bytes: int
+    #: publisher-supplied metadata (the streaming learner records the
+    #: stream step/time the weights were trained through — what
+    #: seconds-behind-stream staleness is measured against)
+    meta: Dict[str, Any] = field(default_factory=dict)
     _cache: Dict[int, np.ndarray] = field(default_factory=dict, repr=False)
 
     # ------------------------------------------------------------ publish
 
     @staticmethod
     def publish(name: str, params: Any, num_shards: int = 1,
-                rules: Any = None) -> "ParamSet":
+                rules: Any = None, meta: Optional[Dict] = None
+                ) -> "ParamSet":
         cluster = _cluster()
         leaves = _flatten(params)
         total = sum(leaf.nbytes for _, leaf in leaves)
@@ -133,10 +169,17 @@ class ParamSet:
                                      lambda v: (v or 0) + 1, default=0)
         ps = ParamSet(name=name, version=version,
                       shard_ids=tuple(r.id for r in refs),
-                      layout=tuple(layout), total_bytes=total)
-        cluster.gcs.put(f"paramset:{name}", {
-            "version": version, "shards": ps.shard_ids,
-            "layout": ps.layout, "bytes": total})
+                      layout=tuple(layout), total_bytes=total,
+                      meta=dict(meta or {}))
+        record = {"version": version, "shards": ps.shard_ids,
+                  "layout": ps.layout, "bytes": total, "meta": ps.meta}
+        cluster.gcs.put(f"paramset:{name}", record)
+        # bounded per-version handle history: lets fetch(version=...)
+        # resolve a pinned read of a specific recent version
+        cluster.gcs.put(f"paramset:{name}@v{version}", record)
+        if version > KEEP_VERSION_HANDLES:
+            cluster.gcs.put(
+                f"paramset:{name}@v{version - KEEP_VERSION_HANDLES}", None)
         # install the new owning refs last: dropping the old version's
         # handles may reclaim its shards immediately, and a concurrent
         # latest() must already see the new handle by then
@@ -150,15 +193,32 @@ class ParamSet:
         return ps
 
     @staticmethod
+    def _from_record(name: str, h: Dict) -> "ParamSet":
+        return ParamSet(name=name, version=h["version"],
+                        shard_ids=tuple(h["shards"]),
+                        layout=tuple(h["layout"]),
+                        total_bytes=h["bytes"],
+                        meta=dict(h.get("meta") or {}))
+
+    @staticmethod
     def latest(name: str) -> Optional["ParamSet"]:
         cluster = _cluster()
         h = cluster.gcs.get(f"paramset:{name}")
         if h is None:
             return None
-        return ParamSet(name=name, version=h["version"],
-                        shard_ids=tuple(h["shards"]),
-                        layout=tuple(h["layout"]),
-                        total_bytes=h["bytes"])
+        return ParamSet._from_record(name, h)
+
+    @staticmethod
+    def at(name: str, version: int) -> Optional["ParamSet"]:
+        """Handle for a specific recent version, or None if its handle
+        record aged out of the bounded history (see
+        `KEEP_VERSION_HANDLES`) — the shards themselves may be gone
+        regardless; `fetch` detects that with a typed error."""
+        cluster = _cluster()
+        h = cluster.gcs.get(f"paramset:{name}@v{version}")
+        if h is None:
+            return None
+        return ParamSet._from_record(name, h)
 
     @staticmethod
     def drop(name: str) -> None:
@@ -181,14 +241,98 @@ class ParamSet:
             self._cache[i] = buf
         return buf
 
-    def fetch(self, timeout: float = 60.0) -> Any:
+    def _pinned_read(self, timeout: float) -> None:
+        """Materialize every not-yet-cached shard buffer under an
+        explicit MemoryManager pin. Pin-then-verify closes the republish
+        race: once the pin is in place AND the refcount is still
+        positive, any later drop-to-zero defers to the pin; a version
+        whose reclaim already started (count <= 0 or freed) is reported
+        as retired *before* any shard is read."""
+        missing = [i for i in range(len(self.shard_ids))
+                   if i not in self._cache]
+        if not missing:
+            return
+        cluster = _cluster()
+        mm, gcs = cluster.memory, cluster.gcs
+        ids = [self.shard_ids[i] for i in missing]
+        key = f"pspin:{self.name}:v{self.version}:{next(_PIN_SEQ)}"
+        mm.pin_ids(key, ids)
+        try:
+            for sid in ids:
+                if gcs.is_freed(sid) or gcs.refcount(sid) <= 0:
+                    raise ParamVersionRetiredError(
+                        f"paramset {self.name} v{self.version}: shard "
+                        f"{sid} superseded and reclaimed — re-fetch "
+                        f"latest()")
+                if not gcs.locations(sid):
+                    # shards are driver/actor puts — no lineage, so a
+                    # location-less shard was wiped by node death and
+                    # can never be read again: report it retired (typed,
+                    # immediately) instead of blocking a full get
+                    # timeout on data that cannot come back. The
+                    # publisher's next publish supersedes it.
+                    raise ParamVersionRetiredError(
+                        f"paramset {self.name} v{self.version}: shard "
+                        f"{sid} has no live copy (publisher node lost) "
+                        f"— await the next publish")
+            try:
+                for i in missing:
+                    self._shard(i, timeout)
+            except ObjectReclaimedError as err:  # pragma: no cover
+                # belt-and-braces: the verify above makes this a
+                # can't-happen, but map it to the typed retirement error
+                # so swap loops have one exception to retry on
+                raise ParamVersionRetiredError(str(err)) from err
+        finally:
+            mm.unpin(key)
+
+    def fetch(self, timeout: float = 60.0,
+              version: Optional[int] = None) -> Any:
         """Reassemble the full pytree. Each leaf is a zero-copy view of
         its shard buffer (read-only when the buffer came out of a
         shared-memory segment) — mutate via `apply`-style functional
-        updates and republish, never in place."""
+        updates and republish, never in place.
+
+        The read is *version-pinned*: shards are pinned against GC for
+        the duration, so a concurrent republish can never reclaim them
+        mid-read; if this version was already reclaimed the fetch raises
+        `ParamVersionRetiredError` before reading anything. Pass
+        ``version=n`` to fetch a specific recent version through the
+        bounded handle history instead of this handle's own."""
+        if version is not None and version != self.version:
+            h = ParamSet.at(self.name, version)
+            if h is None:
+                raise ParamVersionRetiredError(
+                    f"paramset {self.name} v{version}: handle record "
+                    f"aged out (keep={KEEP_VERSION_HANDLES})")
+            return h.fetch(timeout=timeout)
+        self._pinned_read(timeout)
         leaves: Dict[str, np.ndarray] = {}
         for path, shape, dtype, s, off, nbytes, _ in self.layout:
             buf = self._shard(s, timeout)
             leaves[path] = buf[off:off + nbytes].view(
                 np.dtype(dtype)).reshape(shape)
         return _unflatten(leaves)
+
+    @staticmethod
+    def fetch_latest(name: str, timeout: float = 60.0,
+                     max_attempts: int = 32
+                     ) -> Optional[Tuple["ParamSet", Any]]:
+        """The hot-swap read loop: fetch the newest live version,
+        retrying when a republish retires the version under the reader.
+        Returns ``(handle, pytree)`` or None when nothing is published.
+        Under continuous publishing each retry observes a strictly newer
+        version, so the loop terminates unless the publisher outruns the
+        reader `max_attempts` times in a row."""
+        last: Optional[ParamVersionRetiredError] = None
+        for _ in range(max_attempts):
+            ps = ParamSet.latest(name)
+            if ps is None:
+                return None
+            try:
+                return ps, ps.fetch(timeout=timeout)
+            except ParamVersionRetiredError as err:
+                last = err
+        raise ParamVersionRetiredError(
+            f"paramset {name}: {max_attempts} consecutive fetches lost "
+            f"the republish race") from last

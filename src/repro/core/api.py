@@ -199,6 +199,43 @@
         consumers hot-swap via ``ParamSet.latest(name)``. The
         publisher's cluster owns the shards — borrowers that must
         outlive the next publish should copy.
+  13. Streaming online learning — ``repro.streaming`` is the
+      train-while-serve plane (the paper's motivating loop: learn from
+      live interaction while answering under latency bounds):
+      * ``StreamSource`` (actor) replays a seeded drifting stream
+        (``StreamConfig`` + ``DriftSpec``: abrupt/gradual label or
+        covariate drift at fixed steps) as bounded, back-pressured
+        mini-batches in the object store — ``pump`` honours an
+        outstanding-batch credit (``block`` or ``shed`` policy),
+        ``take``/``ack`` move ownership to the consumer and release it.
+      * ``StreamLearner`` (actor) runs prequential (predict-then-learn)
+        SGD per batch, watches its own loss through a ``DriftMonitor``
+        (ADWIN window-splitting + loss-EWMA detectors, typed
+        ``DriftEvent``s), resets the model on detected drift, and
+        publishes versioned weights through ``ParamSet`` on a cadence
+        (forced on drift). Checkpointing rides the actor runtime's
+        ``checkpoint_interval`` — a killed learner node restores +
+        replays and keeps publishing.
+      * ``ParamSet.fetch(version=...)`` is version-pinned: shards are
+        pinned before the read and verified live, so a concurrent
+        republish surfaces as typed ``ParamVersionRetiredError``
+        (re-fetch latest), never a torn read or a mid-wave
+        ``ObjectReclaimedError``; a version whose publisher node died
+        with its shards is likewise reported retired immediately. The
+        last ``KEEP_VERSION_HANDLES`` version handles stay queryable.
+      * ``StreamingPipeline`` wires source -> learner (compiled step
+        graph) -> the §11 FrontDoor: serving replicas hot-swap to the
+        newest version strictly *between* waves (a failed swap keeps
+        the current weights — it never takes a wave down), and
+        ``SLOTracker`` extends the ledger with weight staleness:
+        ``published_version``/``served_version``, live ``version_lag``
+        (reset on swap), worst-case ``version_lag_max``, and per-request
+        ``behind_s`` — stream-seconds of data the serving weights had
+        not trained through. ``benchmarks/stream_bench.py`` gates
+        drift recovery vs a frozen baseline, swap overhead, store
+        residency under churn, and learner-kill recovery; the DES
+        scenario ``streaming_drift`` replays the same policies in
+        virtual time.
 
 Usage:
     cluster = init(num_nodes=4, workers_per_node=2)

@@ -241,6 +241,41 @@ class MemoryManager:
         with self._pins_lock:
             return self._pin_counts.get(oid, 0)
 
+    def pin_ids(self, key: str, ids: Iterable[str]) -> None:
+        """Explicit reader pin, no task attached: hold `ids` against
+        refcount-zero reclaim until ``unpin(key)``. This is what makes a
+        version-pinned `ParamSet.fetch` safe against a concurrent
+        republish dropping the version's last owning refs mid-read — the
+        reclaimer defers any object with a live pin and re-checks it
+        when the pin drops."""
+        ids = tuple(ids)
+        if not ids:
+            return
+        with self._pins_lock:
+            self._pin_locked(key, ids)
+
+    def unpin(self, key: str) -> None:
+        """Release an explicit ``pin_ids`` pin: mirror of the DONE-path
+        unpin — ids whose pin count hits zero are handed to the
+        reclaimer as check candidates (their refcount may have reached
+        zero while pinned)."""
+        check: List[str] = []
+        with self._pins_lock:
+            pinned = self._pins_by_task.pop(key, ())
+            for oid in pinned:
+                c = self._pin_counts.get(oid, 0) - 1
+                if c <= 0:
+                    self._pin_counts.pop(oid, None)
+                    check.append(oid)
+                else:
+                    self._pin_counts[oid] = c
+        if check:
+            with self._reclaim_cv:
+                was_empty = not self._queue
+                self._queue.extend(("chk", oid) for oid in check)
+                if was_empty:
+                    self._reclaim_cv.notify()
+
     def on_task_done(self, spec) -> None:
         """A task reached DONE: unpin its arguments, and hand candidates
         to the reclaimer. Runs on the worker's critical path, so it does

@@ -50,7 +50,14 @@ def summarize(gcs: ControlPlane) -> Dict[str, float]:
     ``device_wait`` (tasks that stalled for a busy device grant),
     ``task_unschedulable`` (tasks sealed because no declared node can
     ever satisfy their resources), and ``param_publish`` (ParamSet
-    versions published, with their total shard bytes)."""
+    versions published, with their total shard bytes). Streaming-plane
+    counters come from the train-while-serve loop (repro.streaming):
+    ``stream_batch`` (mini-batches produced into the object store),
+    ``drift`` (detector fires, from repro.streaming.drift),
+    ``learner_reset`` (drift-triggered model resets), and
+    ``weight_swap`` (serving replicas hot-swapping to a newer ParamSet
+    version between waves, each carrying ``lag`` — the version jump —
+    whose mean is ``swap_version_lag_mean``)."""
     raw = gcs.events()
     tl: Dict[str, List] = defaultdict(list)
     evictions = reclaims = reconstructs_after_evict = 0
@@ -67,6 +74,8 @@ def summarize(gcs: ControlPlane) -> Dict[str, float]:
     kernel_tasks = device_waits = unschedulable = param_publishes = 0
     kernel_ms_total = 0.0
     param_bytes = 0
+    stream_batches = drift_events = weight_swaps = learner_resets = 0
+    swap_lag_total = 0
     for t, kind, task_id, where, extra in raw:
         tl[task_id].append((t, kind, where, extra))
         if kind == "evict":
@@ -129,6 +138,15 @@ def summarize(gcs: ControlPlane) -> Dict[str, float]:
         elif kind == "param_publish":
             param_publishes += 1
             param_bytes += extra.get("bytes", 0)
+        elif kind == "stream_batch":
+            stream_batches += 1
+        elif kind == "drift":
+            drift_events += 1
+        elif kind == "weight_swap":
+            weight_swaps += 1
+            swap_lag_total += extra.get("lag", 0)
+        elif kind == "learner_reset":
+            learner_resets += 1
     submit_to_start, run_times, spills, locals_ = [], [], 0, 0
     for task_id, events in tl.items():
         events.sort()
@@ -187,6 +205,11 @@ def summarize(gcs: ControlPlane) -> Dict[str, float]:
         "tasks_unschedulable": unschedulable,
         "param_publishes": param_publishes,
         "param_bytes": float(param_bytes),
+        "stream_batches": stream_batches,
+        "drift_events": drift_events,
+        "weight_swaps": weight_swaps,
+        "swap_version_lag_mean": swap_lag_total / max(weight_swaps, 1),
+        "learner_resets": learner_resets,
     }
 
 

@@ -45,6 +45,11 @@ class Request:
     prompt: np.ndarray                  # (S,) int32
     max_new_tokens: int = 16
     created: float = field(default_factory=time.perf_counter)
+    # tenancy class: orders requests *within a deadline bucket* in the
+    # front door's EDF queue (higher first) — deadlines still dominate
+    # across buckets. 0 = bulk; the streaming pipeline submits
+    # learner-feedback traffic at 1 so it outranks bulk under load.
+    priority: int = 0
 
 
 @dataclass

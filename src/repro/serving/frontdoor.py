@@ -15,6 +15,10 @@ open-loop tier above the same replicas:
     and across buckets). A request whose deadline passes while queued is
     *shed* with a typed `DeadlineShedError` — it is never dispatched, so
     replica capacity only ever runs work that can still meet its SLO.
+    Within a quantized deadline bucket (``priority_quantum_s``),
+    requests order by a small `priority` tenancy class — the streaming
+    pipeline's learner-feedback traffic outranks bulk without ever
+    overriding an earlier deadline bucket.
   * **Adaptive batching** — per-replica AIMD controllers (Clipper-style)
     grow the wave size additively while observed wave latency sits under
     `target_wave_s` and halve it when a wave overshoots: throughput of
@@ -174,20 +178,30 @@ class _Replica:
         self.node_id = node_id
 
 
-# one queued request: EDF heap entry (deadline-ordered, seq tiebreak
-# keeps FIFO among equal deadlines), plus its per-request retry count
+# one queued request: EDF heap entry, plus its per-request retry count.
+# Order: quantized deadline first (earliest bucket wins — still EDF),
+# then priority class within a bucket (higher first — tenancy: the
+# streaming pipeline's learner-feedback traffic outranks bulk), then
+# seq (FIFO among equals). The *exact* deadline stays authoritative for
+# shedding and the never-dispatch-late invariant; only the ordering is
+# quantized, so priority has a window to matter in.
 class _Entry:
-    __slots__ = ("deadline", "seq", "request", "ticket", "attempt")
+    __slots__ = ("deadline", "seq", "request", "ticket", "attempt",
+                 "priority", "_key")
 
-    def __init__(self, deadline, seq, request, ticket, attempt=0):
+    def __init__(self, deadline, seq, request, ticket, attempt=0,
+                 priority=0, quantum=0.0):
         self.deadline = deadline
         self.seq = seq
         self.request = request
         self.ticket = ticket
         self.attempt = attempt
+        self.priority = priority
+        bucket = round(deadline / quantum) if quantum > 0 else deadline
+        self._key = (bucket, -priority, seq)
 
     def __lt__(self, other):
-        return (self.deadline, self.seq) < (other.deadline, other.seq)
+        return self._key < other._key
 
 
 class FrontDoor:
@@ -216,6 +230,7 @@ class FrontDoor:
                  grow_cluster: bool = False,
                  resources: Optional[Dict[str, float]] = None,
                  slo_window_s: float = 30.0,
+                 priority_quantum_s: float = 0.01,
                  controller_factory: Optional[
                      Callable[[], BatchController]] = None,
                  cluster=None):
@@ -247,6 +262,9 @@ class FrontDoor:
         # reordered by deadline
         self.max_inflight_per_replica = max(1, max_inflight_per_replica)
         self.grow_cluster = grow_cluster
+        # deadline quantization for priority ordering (see _Entry): 0
+        # restores pure (deadline, seq) EDF with priority inert
+        self.priority_quantum_s = max(0.0, priority_quantum_s)
         # one controller per replica (spawned replicas included): AIMD
         # by default, or a caller-supplied policy (the serve bench pins
         # FixedBatchController for its baseline arms)
@@ -282,9 +300,11 @@ class FrontDoor:
     # ------------------------------------------------------------- intake
 
     def submit(self, prompt, max_new_tokens: int = 4,
-               deadline_s: Optional[float] = None) -> ServeTicket:
+               deadline_s: Optional[float] = None,
+               priority: int = 0) -> ServeTicket:
         req = Request(next(self._req_ids),
-                      np.asarray(prompt, np.int32), max_new_tokens)
+                      np.asarray(prompt, np.int32), max_new_tokens,
+                      priority=priority)
         return self.submit_request(req, deadline_s)
 
     def submit_request(self, request: Request,
@@ -314,7 +334,9 @@ class FrontDoor:
                 raise AdmissionError(
                     f"queue full: {self._queued} queued + {inflight} "
                     f"in-flight >= max_queue={self.max_queue}")
-            entry = _Entry(deadline, next(self._seq), request, ticket)
+            entry = _Entry(deadline, next(self._seq), request, ticket,
+                           priority=getattr(request, "priority", 0),
+                           quantum=self.priority_quantum_s)
             heapq.heappush(
                 self._buckets.setdefault(len(request.prompt), []), entry)
             self._queued += 1

@@ -59,6 +59,25 @@ class SLOTracker:
         self.dispatched_past_deadline = 0
         self._first_completion: Optional[float] = None
         self._last_completion: Optional[float] = None
+        # ---- weight staleness (streaming train-while-serve plane) ----
+        # publisher side bumps published_version; replicas bump
+        # served_version on a between-wave hot swap. The live lag
+        # (published - served) is monotone nondecreasing between swaps
+        # and drops back on swap; version_lag_max records the worst gap
+        # ever observed, swap lag the per-swap version jump.
+        self.published_version = 0
+        self.served_version = 0
+        self.weight_swaps = 0
+        self.version_lag_max = 0
+        self._swap_lag_total = 0
+        # per-completion staleness samples: how stale were the weights
+        # that actually served the request (versions behind the newest
+        # publish, and seconds of stream the weights had not seen)
+        self.staleness_samples = 0
+        self._lag_total = 0
+        self._behind_total = 0.0
+        self.behind_s_max = 0.0
+        self.behind_s_last = 0.0
 
     # ------------------------------------------------------------ record
 
@@ -85,6 +104,43 @@ class SLOTracker:
     def record_late_dispatch(self) -> None:
         with self._lock:
             self.dispatched_past_deadline += 1
+
+    # ------------------------------------------------- weight staleness
+
+    def record_publish(self, version: int) -> None:
+        """A new weight version landed (learner side). Monotone: a
+        replayed/duplicate publish notification never lowers it."""
+        with self._lock:
+            self.published_version = max(self.published_version, version)
+            self.version_lag_max = max(
+                self.version_lag_max,
+                self.published_version - self.served_version)
+
+    def record_swap(self, version: int) -> None:
+        """A serving replica hot-swapped to `version` between waves:
+        the live lag resets against the new served version."""
+        with self._lock:
+            self.weight_swaps += 1
+            self._swap_lag_total += max(0, version - self.served_version)
+            self.served_version = max(self.served_version, version)
+            self.published_version = max(self.published_version, version)
+
+    def record_staleness(self, version_lag: int, behind_s: float) -> None:
+        """One served request's weight staleness: versions behind the
+        newest publish at completion time, and stream-seconds the
+        serving weights had not yet trained through."""
+        with self._lock:
+            self.staleness_samples += 1
+            self._lag_total += max(0, version_lag)
+            self._behind_total += max(0.0, behind_s)
+            self.behind_s_last = behind_s
+            self.behind_s_max = max(self.behind_s_max, behind_s)
+
+    def version_lag(self) -> int:
+        """Live lag: published versions the serving tier has not swapped
+        to yet. Grows monotonically between swaps, resets on swap."""
+        with self._lock:
+            return self.published_version - self.served_version
 
     def record_completion(self, latency_s: float, met_deadline: bool,
                           now: Optional[float] = None) -> None:
@@ -130,6 +186,20 @@ class SLOTracker:
                 "completed_ok": self.completed_ok,
                 "completed_late": self.completed_late,
                 "dispatched_past_deadline": self.dispatched_past_deadline,
+                "published_version": self.published_version,
+                "served_version": self.served_version,
+                "version_lag": (self.published_version
+                                - self.served_version),
+                "version_lag_max": self.version_lag_max,
+                "weight_swaps": self.weight_swaps,
+                "swap_lag_mean": (self._swap_lag_total
+                                  / max(self.weight_swaps, 1)),
+                "staleness_samples": self.staleness_samples,
+                "staleness_lag_mean": (self._lag_total
+                                       / max(self.staleness_samples, 1)),
+                "behind_s_mean": (self._behind_total
+                                  / max(self.staleness_samples, 1)),
+                "behind_s_max": self.behind_s_max,
             }
 
     def overall_goodput(self, now: Optional[float] = None) -> float:

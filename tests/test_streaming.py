@@ -1,0 +1,429 @@
+"""Streaming online-learning plane tests: drift-detector determinism,
+SLOTracker weight-staleness accounting, the version-pinned ParamSet
+fetch (publish/fetch hammer — the hot-swap race regression),
+priority-within-deadline-bucket EDF ordering, source back-pressure +
+GC reclaim of consumed batches, the prequential learner (cadence,
+drift reset, checkpoint state), the end-to-end StreamingPipeline, the
+`streaming_drift` DES scenario, and the profiler's streaming counters."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import core
+from repro.compute.params import (KEEP_VERSION_HANDLES, ParamSet,
+                                  ParamVersionRetiredError)
+from repro.core.memory import ObjectReclaimedError
+from repro.serving.engine import Request
+from repro.serving.frontdoor import _Entry
+from repro.serving.slo import SLOTracker
+from repro.streaming.drift import (AdwinDetector, DriftEvent,
+                                   DriftMonitor, LossEWMADetector)
+from repro.streaming.learner import OnlineLogit, StreamLearner
+from repro.streaming.pipeline import StreamingPipeline
+from repro.streaming.sources import (DriftSpec, StreamBatch, StreamConfig,
+                                     StreamSource, synthetic_stream)
+
+
+@pytest.fixture()
+def cluster():
+    c = core.init(num_nodes=3, workers_per_node=2)
+    yield c
+    core.shutdown()
+
+
+# ----------------------------------------------------- stream sources
+
+def test_stream_is_seeded_replayable():
+    cfg = StreamConfig(dim=8, batch=16, seed=7)
+    a, b = synthetic_stream(cfg), synthetic_stream(cfg)
+    for _ in range(5):
+        ba, bb = next(a), next(b)
+        assert ba.step == bb.step
+        np.testing.assert_array_equal(ba.x, bb.x)
+        np.testing.assert_array_equal(ba.y, bb.y)
+
+
+def test_abrupt_label_drift_changes_concept():
+    cfg = StreamConfig(dim=8, batch=256, seed=3, label_noise=0.0,
+                       drifts=(DriftSpec(at_step=5, kind="abrupt",
+                                         target="label"),))
+    gen = synthetic_stream(cfg)
+    batches = [next(gen) for _ in range(10)]
+    # labels before and after the drift disagree under the other
+    # regime's concept: fit a fast probe on pre-drift data and check it
+    # collapses post-drift
+    probe = OnlineLogit(8, lr=1.0)
+    for b in batches[:5]:
+        for _ in range(5):
+            probe.learn(b.x.astype(np.float64), b.y.astype(np.float64))
+    pre = np.mean((probe.predict_proba(batches[4].x) > 0.5)
+                  == (batches[4].y > 0.5))
+    post = np.mean((probe.predict_proba(batches[6].x) > 0.5)
+                   == (batches[6].y > 0.5))
+    assert pre > 0.9 and post < 0.8
+
+
+def test_gradual_covariate_drift_moves_mean():
+    cfg = StreamConfig(dim=4, batch=512, seed=0, drifts=(
+        DriftSpec(at_step=2, kind="gradual", target="covariate",
+                  duration=6, magnitude=4.0),))
+    gen = synthetic_stream(cfg)
+    batches = [next(gen) for _ in range(12)]
+    d_early = np.linalg.norm(batches[1].x.mean(0))
+    d_mid = np.linalg.norm(batches[5].x.mean(0))
+    d_late = np.linalg.norm(batches[10].x.mean(0))
+    assert d_early < d_mid < d_late
+    assert d_late == pytest.approx(4.0, abs=1.0)
+
+
+def test_source_backpressure_blocks_at_credit(cluster):
+    src = core.remote(StreamSource).submit(
+        StreamConfig(dim=4, batch=8, seed=1), max_ahead=3, policy="block")
+    stats = core.get(src.pump.submit(10))
+    assert stats["produced"] == 3          # credit window, not request
+    assert stats["outstanding"] == 3
+    # stream clock paused: nothing lost, nothing shed
+    assert core.get(src.stats.submit())["shed"] == 0
+    taken = core.get(src.take.submit(10))
+    assert [s for _, s, _ in taken] == [0, 1, 2]
+    # un-acked batches still hold the credit window shut
+    assert core.get(src.pump.submit(10))["produced"] == 0
+    assert core.get(src.ack.submit([oid for oid, _, _ in taken])) == 3
+    assert core.get(src.pump.submit(10))["produced"] == 3
+
+
+def test_source_shed_policy_advances_stream(cluster):
+    src = core.remote(StreamSource).submit(
+        StreamConfig(dim=4, batch=8, seed=1), max_ahead=2, policy="shed")
+    core.get(src.pump.submit(6))
+    st = core.get(src.stats.submit())
+    assert st["shed"] == 4 and st["produced"] == 2
+    # the shed batches are gone from the stream: next take resumes past
+    # them once credit frees
+    taken = core.get(src.take.submit(2))
+    core.get(src.ack.submit([oid for oid, _, _ in taken]))
+    core.get(src.pump.submit(1))
+    nxt = core.get(src.take.submit(1))
+    assert nxt[0][1] == 6                  # steps 2..5 were shed
+
+
+def test_acked_batches_are_gc_reclaimed(cluster):
+    src = core.remote(StreamSource).submit(
+        StreamConfig(dim=16, batch=64, seed=2), max_ahead=2)
+    core.get(src.pump.submit(2))
+    taken = core.get(src.take.submit(2))
+    oids = [oid for oid, _, _ in taken]
+    assert all(cluster.gcs.refcount(o) > 0 for o in oids)
+    core.get(src.ack.submit(oids))
+    for o in oids:
+        assert cluster.memory.wait_reclaimed(o, timeout=5.0)
+
+
+# ------------------------------------------------------ drift detectors
+
+def _error_series(seed=11, n=200, shift_at=100, lo=0.1, hi=0.6):
+    rng = np.random.default_rng(seed)
+    return [float(np.clip((lo if i < shift_at else hi)
+                          + rng.normal(0, 0.03), 0, 1))
+            for i in range(n)]
+
+
+def test_ewma_fires_once_on_shift_with_cooldown():
+    det = LossEWMADetector()
+    fires = [det.update(v, i) for i, v in enumerate(_error_series())]
+    events = [e for e in fires if e is not None]
+    assert len(events) == 1
+    ev = events[0]
+    assert 100 <= ev.step <= 110          # reacts within a few steps
+    assert ev.mean_after > ev.mean_before
+
+
+def test_adwin_fires_on_shift_not_on_stationary():
+    det = AdwinDetector()
+    events = [det.update(v, i) for i, v in
+              enumerate(_error_series(shift_at=100))]
+    assert any(e is not None for e in events)
+    quiet = AdwinDetector()
+    stationary = _error_series(shift_at=10**9)   # never shifts
+    assert all(quiet.update(v, i) is None
+               for i, v in enumerate(stationary))
+
+
+def test_adwin_window_shrinks_to_recent_side():
+    det = AdwinDetector(max_window=128)
+    for i, v in enumerate(_error_series(n=160, shift_at=80)):
+        det.update(v, i)
+    # post-detection window holds post-change data: mean near hi regime
+    assert det.mean > 0.4
+
+
+def test_drift_monitor_deterministic_event_sequence():
+    series = _error_series(seed=5)
+
+    def run():
+        m = DriftMonitor(AdwinDetector(), LossEWMADetector())
+        for i, v in enumerate(series):
+            m.update(v, i)
+        return m.events
+
+    a, b = run(), run()
+    assert a == b and len(a) >= 1
+    assert all(isinstance(e, DriftEvent) for e in a)
+
+
+# --------------------------------------------- SLOTracker staleness
+
+def test_staleness_lag_monotone_between_swaps_resets_on_swap():
+    slo = SLOTracker()
+    lags = []
+    for v in range(1, 5):
+        slo.record_publish(v)
+        lags.append(slo.version_lag())
+    assert lags == [1, 2, 3, 4]            # monotone between swaps
+    assert slo.snapshot()["version_lag_max"] == 4
+    slo.record_swap(4)
+    assert slo.version_lag() == 0          # reset on swap
+    assert slo.snapshot()["weight_swaps"] == 1
+    assert slo.snapshot()["swap_lag_mean"] == 4.0
+    # duplicate/replayed publish notification never lowers the version
+    slo.record_publish(2)
+    assert slo.snapshot()["published_version"] == 4
+
+
+def test_staleness_samples_aggregate():
+    slo = SLOTracker()
+    slo.record_staleness(2, 0.5)
+    slo.record_staleness(0, 0.1)
+    slo.record_staleness(4, 1.4)
+    snap = slo.snapshot()
+    assert snap["staleness_samples"] == 3
+    assert snap["staleness_lag_mean"] == pytest.approx(2.0)
+    assert snap["behind_s_mean"] == pytest.approx(2.0 / 3)
+    assert snap["behind_s_max"] == pytest.approx(1.4)
+
+
+# ------------------------------------- ParamSet version-pinned fetch
+
+def test_fetch_specific_version_via_handle_history(cluster):
+    for i in range(3):
+        ParamSet.publish("vh", {"w": np.full(8, i, np.float32)})
+    ps = ParamSet.latest("vh")
+    assert ps.version == 3
+    # v3 is live (owning refs held); superseded versions' shards reclaim
+    # once the deferred GC drains — after which a pinned fetch reports
+    # them retired, typed, before reading anything
+    tree = ps.fetch(version=3)
+    assert float(tree["w"][0]) == 2.0
+    old = ParamSet.at("vh", 2)
+    for sid in old.shard_ids:
+        assert cluster.memory.wait_reclaimed(sid, timeout=5.0)
+    with pytest.raises(ParamVersionRetiredError):
+        ps.fetch(version=2)
+    # versions beyond the bounded handle history age out typed as well
+    with pytest.raises(ParamVersionRetiredError):
+        ps.fetch(version=3 + KEEP_VERSION_HANDLES + 1)
+
+
+def test_publish_fetch_hammer_no_reclaimed_error(cluster):
+    """The hot-swap race regression: continuous republish against
+    concurrent fetch_latest readers must never surface a raw
+    ObjectReclaimedError (the pre-fix failure mode) nor leak a retired
+    error out of the retry loop."""
+    stop = threading.Event()
+    errors = []
+
+    def publisher():
+        i = 0
+        while not stop.is_set():
+            ParamSet.publish("hammer",
+                             {"w": np.full(2048, i, np.float32)})
+            i += 1
+
+    def reader():
+        while not stop.is_set():
+            try:
+                got = ParamSet.fetch_latest("hammer", timeout=10.0)
+                if got is not None:
+                    _, tree = got
+                    w = tree["w"]
+                    # touch every element: a mid-read reclaim corrupts
+                    # or raises here
+                    assert float(w.sum()) == w[0] * len(w)
+            except ObjectReclaimedError as e:       # the regression
+                errors.append(f"ObjectReclaimedError escaped: {e}")
+            except ParamVersionRetiredError as e:
+                errors.append(f"retired escaped fetch_latest: {e}")
+            except Exception as e:  # noqa: BLE001
+                errors.append(repr(e))
+
+    threads = [threading.Thread(target=publisher, daemon=True)] + [
+        threading.Thread(target=reader, daemon=True) for _ in range(3)]
+    for t in threads:
+        t.start()
+    time.sleep(1.5)
+    stop.set()
+    for t in threads:
+        t.join(5.0)
+    assert errors == []
+
+
+def test_pinned_fetch_defers_reclaim_under_pin(cluster):
+    ps = ParamSet.publish("pin", {"w": np.arange(16, dtype=np.float32)})
+    sid = ps.shard_ids[0]
+    cluster.memory.pin_ids("test-pin", [sid])
+    try:
+        ParamSet.publish("pin", {"w": np.zeros(16, np.float32)})
+        # superseded: the owning refs drop and the refcount drains to
+        # zero (deferred through the reclaimer queue) — but the pin
+        # defers the discard, so the shard data stays resident
+        deadline = time.time() + 5.0
+        while cluster.gcs.refcount(sid) > 0 and time.time() < deadline:
+            time.sleep(0.01)
+        assert cluster.gcs.refcount(sid) <= 0
+        buf = core.get(core.ObjectRef(sid), timeout=5.0)
+        assert buf.nbytes == 16 * 4
+    finally:
+        cluster.memory.unpin("test-pin")
+    # pin released: reclaim completes now
+    assert cluster.memory.wait_reclaimed(sid, timeout=5.0)
+
+
+# --------------------------------------- FrontDoor priority ordering
+
+def test_priority_orders_within_deadline_bucket():
+    base = 1000.0
+    quantum = 0.01
+    low = _Entry(base + 0.001, seq=0, request=None, ticket=None,
+                 priority=0, quantum=quantum)
+    high = _Entry(base + 0.004, seq=1, request=None, ticket=None,
+                  priority=1, quantum=quantum)
+    # same quantized bucket: priority wins despite later seq/deadline
+    assert high < low
+    # an earlier bucket always dominates any priority
+    earlier = _Entry(base - 0.5, seq=2, request=None, ticket=None,
+                     priority=0, quantum=quantum)
+    assert earlier < high
+    # quantum 0 restores pure EDF: priority inert
+    a = _Entry(base + 0.001, seq=0, request=None, ticket=None,
+               priority=0, quantum=0.0)
+    b = _Entry(base + 0.004, seq=1, request=None, ticket=None,
+               priority=5, quantum=0.0)
+    assert a < b
+
+
+def test_request_carries_priority_default_zero():
+    r = Request(0, np.zeros(4, np.int32))
+    assert r.priority == 0
+    r2 = Request(1, np.zeros(4, np.int32), priority=3)
+    assert r2.priority == 3
+
+
+# ------------------------------------------------------- learner
+
+def _batches(cfg, n):
+    gen = synthetic_stream(cfg)
+    return [next(gen) for _ in range(n)]
+
+
+def test_learner_prequential_improves(cluster):
+    ln = StreamLearner("t-learn", dim=8, publish_every=4)
+    accs = [ln.step(b)["acc"]
+            for b in _batches(StreamConfig(dim=8, batch=64, seed=9), 30)]
+    # predict-then-learn: early scores are chance-ish, late ones high
+    assert np.mean(accs[:3]) < np.mean(accs[-5:])
+    assert np.mean(accs[-5:]) > 0.85
+    st = ln.stats()
+    assert st["steps"] == 30 and st["samples"] == 30 * 64
+    # publish cadence: every 4 steps (no drift in a stationary stream)
+    assert st["published_version"] == ParamSet.latest("t-learn").version
+    # last on-cadence publish in 30 steps fires at step 28 (4, 8, ... 28)
+    assert ParamSet.latest("t-learn").meta["learner_steps"] == 28
+
+
+def test_learner_drift_reset_and_forced_publish(cluster):
+    # drift lands after a real warm-up: the EWMA slow baseline needs to
+    # settle past the untrained model's initial ~0.5 error first
+    cfg = StreamConfig(dim=8, batch=64, seed=9, drifts=(
+        DriftSpec(at_step=80, kind="abrupt", target="label"),))
+    ln = StreamLearner("t-drift", dim=8, publish_every=1000,
+                       lr=0.3)                 # slow learner: drift shows
+    results = [ln.step(b) for b in _batches(cfg, 160)]
+    st = ln.stats()
+    assert st["drift_events"] >= 1 and st["resets"] >= 1
+    # a drift fire forces an off-cadence publish
+    fired = [r for r in results if r["drift"]]
+    assert fired and fired[0]["version"] is not None
+    # post-reset the learner recovers on the new concept
+    assert np.mean([r["acc"] for r in results[-10:]]) > 0.85
+
+
+def test_learner_checkpoint_roundtrip():
+    ln = StreamLearner("t-ckpt", dim=4, publish_every=2)
+    ln.model.w = np.array([1.0, 2.0, 3.0, 4.0])
+    ln.steps = 7
+    state = ln.__getstate__()
+    ln2 = StreamLearner.__new__(StreamLearner)
+    ln2.__setstate__(state)
+    np.testing.assert_array_equal(ln2.model.w, ln.model.w)
+    assert ln2.steps == 7 and ln2.model.dim == 4
+
+
+# ---------------------------------------------------- pipeline e2e
+
+def test_pipeline_end_to_end_with_staleness(cluster):
+    cfg = StreamConfig(dim=8, batch=24, seed=42, interval_s=0.01,
+                       drifts=(DriftSpec(at_step=25, kind="abrupt",
+                                         target="label"),))
+    p = StreamingPipeline(cfg, publish_every=4, serve_per_batch=6,
+                          deadline_s=0.5, engine_base_s=0.0005,
+                          engine_per_req_s=0.0001)
+    rep = p.run(50)
+    p.close()
+    assert rep["unresolved"] == 0
+    assert rep["lost_steps"] == 0
+    assert rep["served_samples"] > 0
+    slo = rep["slo"]
+    assert slo["dispatched_past_deadline"] == 0
+    assert slo["weight_swaps"] > 0
+    assert slo["staleness_samples"] > 0
+    assert slo["published_version"] >= slo["served_version"] > 0
+    # online beats frozen on the post-drift tail of the same stream
+    on, fr, n = (lambda w: (sum(s[1] for s in w) / len(w),
+                            sum(s[2] for s in w) / len(w), len(w)))(
+        [s for s in p.samples if s[0] >= 38])
+    assert n > 0 and on > fr
+    # profiler surfaces the streaming counters
+    from repro.core.profiler import summarize
+    s = summarize(cluster.gcs)
+    assert s["stream_batches"] >= 50
+    assert s["weight_swaps"] == slo["weight_swaps"]
+    assert s["drift_events"] >= 0 and s["learner_resets"] >= 0
+    assert s["swap_version_lag_mean"] >= 0
+    # rolling accuracy series is well-formed
+    roll = p.rolling_accuracy(window=50)
+    assert len(roll) == len(p.samples)
+    assert all(0.0 <= a <= 1.0 for _, a, _ in roll)
+
+
+def test_pipeline_source_drains_after_run(cluster):
+    cfg = StreamConfig(dim=4, batch=8, seed=1, interval_s=0.0)
+    p = StreamingPipeline(cfg, publish_every=4, serve_per_batch=2,
+                          engine_base_s=0.0, engine_per_req_s=0.0)
+    rep = p.run(20)
+    p.close()
+    assert rep["source"]["outstanding"] == 0   # all batches acked → GC
+    assert rep["source"]["acked"] == rep["source"]["produced"] == 20
+
+
+# ------------------------------------------------------ DES scenario
+
+def test_des_streaming_drift_recovers_deterministically():
+    from repro.core.simulator import streaming_drift
+    r = streaming_drift(num_batches=240, drift_at=120, seed=42)
+    assert r["recovered"]
+    assert r["drift_events"] >= 1 and r["learner_resets"] >= 1
+    assert r["post_drift_acc_online"] > r["post_drift_acc_frozen"] + 0.05
+    assert r["weight_swaps"] > 0 and r["version_lag_max"] >= 0
+    assert streaming_drift(num_batches=240, drift_at=120, seed=42) == r
